@@ -1,0 +1,94 @@
+"""Ablations: structural knobs vs HLO cost (single-device, smoke-scale).
+
+Quantifies the knobs the §Perf loop reasons about, on CPU-compilable sizes:
+
+  * rwkv6 WKV chunk size        -> FLOPs/bytes of the chunked recurrence
+  * attention query chunking    -> peak temp of the scores pipeline
+  * remat policy                -> FLOPs (recompute) vs temp (storage)
+
+Run: PYTHONPATH=src python -m benchmarks.ablations
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv_chunk_ablation() -> None:
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, K = 2, 1024, 4, 64
+    rng = np.random.RandomState(0)
+    r = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, K), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    lw = -jnp.exp(jnp.asarray(rng.randn(B, T, H, K), jnp.float32))
+    u = jnp.asarray(rng.randn(H, K), jnp.float32)
+    s0 = jnp.zeros((B, H, K, K))
+    print("## rwkv6 WKV chunk size (T=1024): intra-chunk work is O(C) per "
+          "token, state hops are O(T/C)")
+    for chunk in (8, 16, 32, 64, 128):
+        fn = jax.jit(lambda a, b, c_, d, e, f, ch=chunk:
+                     wkv_chunked(a, b, c_, d, e, f, chunk=ch)[0])
+        comp = fn.lower(r, k, v, lw, u, s0).compile()
+        ca = comp.cost_analysis()
+        m = comp.memory_analysis()
+        print(f"  chunk={chunk:4d}: flops={ca['flops']:.3e} "
+              f"bytes={ca['bytes accessed']:.3e} "
+              f"temp={m.temp_size_in_bytes/1e6:.1f}MB")
+
+
+def attn_qchunk_ablation() -> None:
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.models.common import init_params
+    cfg = get_config("qwen2-1.5b-smoke")
+    cfg = dataclasses.replace(cfg, num_layers=2)
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    x = jnp.zeros((2, 512), jnp.int32)
+    print("## attention scores pipeline (S=512, 2L): full vs remat")
+    for remat in (False, True):
+        fn = jax.jit(lambda p, t, r=remat: tf.forward_full(
+            cfg, p, t, unroll=True, remat=r)[0])
+        comp = fn.lower(params, x).compile()
+        ca = comp.cost_analysis()
+        m = comp.memory_analysis()
+        print(f"  remat={str(remat):5s}: flops={ca['flops']:.3e} "
+              f"temp={m.temp_size_in_bytes/1e6:.1f}MB")
+
+
+def remat_policy_ablation() -> None:
+    from repro.configs import get_config
+    from repro.launch.steps import make_train_step, input_specs
+    from repro.models import transformer as tf
+    from repro.models.common import init_params
+    from repro.optim.adamw import adamw_init_specs
+    from repro.configs.base import ShapeConfig
+    cfg = get_config("qwen2-1.5b-smoke")
+    shape = ShapeConfig("abl", "train", 256, 4)
+    specs = tf.model_specs(cfg)
+    params = init_params(jax.random.PRNGKey(0), specs)
+    opt = init_params(jax.random.PRNGKey(1), adamw_init_specs(specs))
+    batch = {"inputs": jnp.zeros((4, 256), jnp.int32),
+             "targets": jnp.zeros((4, 256), jnp.int32)}
+    print("## remat policy (train step): recompute FLOPs vs stored temp")
+    for policy in ("full", "dots"):
+        step = make_train_step(cfg, unroll=True, remat_policy=policy)
+        comp = jax.jit(step).lower(params, opt, batch).compile()
+        ca = comp.cost_analysis()
+        m = comp.memory_analysis()
+        print(f"  policy={policy:5s}: flops={ca['flops']:.3e} "
+              f"temp={m.temp_size_in_bytes/1e6:.1f}MB")
+
+
+def main() -> None:
+    wkv_chunk_ablation()
+    attn_qchunk_ablation()
+    remat_policy_ablation()
+
+
+if __name__ == "__main__":
+    main()

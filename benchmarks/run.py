@@ -1,0 +1,288 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. "eager" is the OS-mediated
+analogue (per-op dispatch + host sync, like Vitis AI's kernel-crossing
+path); "fused" is the baremetal analogue (one XLA program per RCB stream).
+The paper reports ratios, not absolutes (§5.1) — the derived column carries
+the ratio each table is about.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import pickle
+import statistics
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rbl, rctc, rimfs
+from repro.core.executor import Executor
+from repro.core.rcb import Op
+from repro.core.rtpm import Platform
+from repro.models import resnet as rn
+
+ROWS: list[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.2f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def _time(fn, n: int, warmup: int = 3) -> list:
+    for _ in range(warmup):
+        fn()
+    xs = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        xs.append(time.perf_counter() - t0)
+    return xs
+
+
+# ---------------------------------------------------------------------------
+# Table 1: per-transfer overhead vs block size (fixed total volume)
+# ---------------------------------------------------------------------------
+
+def table1_transfer_overhead(total_mb: float = 2.0) -> None:
+    """Per-transfer overhead, per-op dispatch vs control-as-data chain.
+
+    The same n-block transfer stream runs (a) op-at-a-time through the
+    eager driver — each block pays the dispatch+sync fixed cost (the
+    OS-mediated/ioctl analogue) — and (b) as ONE fused RCB chain — the
+    control for all n transfers flattened into a single dispatch (the
+    baremetal analogue). Paper Table 1: 7.0x/5.4x/3.0x/2.2x at
+    1/4/16/32 KB, decaying as the fixed cost amortizes."""
+    rng = np.random.RandomState(0)
+    total = int(total_mb * (1 << 20))
+    speedups = []
+    for kb in (1, 4, 16, 32):
+        block = kb << 10
+        n = min(256, max(8, total // block))
+        floats = block // 4
+        prog = rctc.compile_passthrough((floats,))
+        bound = rbl.bind(prog, inputs={})
+        ex = Executor()
+        xs = {f"in{i}": rng.randn(floats).astype(np.float32)
+              for i in range(n)}
+
+        def eager():
+            for i in range(n):
+                ex.run(bound, inputs={"input": xs[f"in{i}"]})
+
+        # control-as-data lets the runtime flatten the n-transfer stream
+        # into ONE descriptor (paper §5.3: fusion/buffering/batching):
+        stacked = np.stack([xs[f"in{i}"] for i in range(n)])
+        sprog = rctc.compile_passthrough((n, floats))
+        fused = ex.fuse(rbl.bind(sprog, inputs={}))
+
+        def fused_stream():
+            jax.block_until_ready(fused({"input": stacked}, {}))
+
+        te = min(_time(eager, 5, warmup=1))
+        tf_ = min(_time(fused_stream, 5, warmup=1))
+        s = te / tf_
+        speedups.append(s)
+        emit(f"table1/block_{kb}kb", te / n * 1e6,
+             f"speedup={s:.2f}x (eager us/transfer shown)")
+    emit("table1/regime", 0.0,
+         "small-block advantage "
+         + ("CONFIRMED" if speedups[0] > speedups[-1] else "NOT-CONFIRMED")
+         + f"; speedups={['%.2f' % s for s in speedups]}")
+
+
+# ---------------------------------------------------------------------------
+# Tables 4/5: matmul + passthrough kernel breakdowns
+# ---------------------------------------------------------------------------
+
+def table45_kernel_breakdowns(rng=None) -> None:
+    rng = rng or np.random.RandomState(0)
+    a = rng.randn(64, 64).astype(np.float32)
+    b = rng.randn(64, 64).astype(np.float32)
+    prog = rctc.compile_matmul(64, with_dma=True)
+    fs = rimfs.mount(rimfs.pack({"b": b}))
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs, inputs={"a": a})
+
+    # eager with per-op traces (paper: 1000 iterations)
+    n = 300
+    ex.op_traces.clear()
+    for _ in range(n):
+        ex.run(bound, trace_ops=True)
+    by_op: dict = {}
+    for t in ex.op_traces:
+        by_op.setdefault(t.op, []).append(t.seconds)
+    h2d_us = statistics.fmean(by_op[Op.DMA_H2D][n // 10:]) * 1e6
+    d2h_us = statistics.fmean(by_op[Op.DMA_D2H][n // 10:]) * 1e6
+    gemm_us = statistics.fmean(by_op[Op.GEMM][n // 10:]) * 1e6
+    emit("table4/eager_input_transfer", h2d_us, "per-op DMA h2d")
+    emit("table4/eager_output_transfer", d2h_us, "per-op DMA d2h")
+    emit("table4/eager_kernel_exec", gemm_us, "per-op dispatch")
+
+    bound2 = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound2)
+    w = ex.weights_from(bound2)
+    t_f = min(_time(lambda: jax.block_until_ready(fused({"a": a}, w)), 30))
+    t_e = min(_time(lambda: ex.run(bound), 30))
+    # fused movement cost = (with-DMA fused) - (no-DMA fused): the compute
+    # is identical, the difference is the streamed transfer cost
+    prog0 = rctc.compile_matmul(64, with_dma=False)
+    b0 = rbl.bind(prog0, rimfs=fs)
+    f0 = ex.fuse(b0)
+    t_f0 = min(_time(lambda: jax.block_until_ready(f0({"a": a}, w)), 30))
+    move_e = h2d_us + d2h_us
+    move_f = max((t_f - t_f0) * 1e6, 0.5)
+    emit("table4/fused_total", t_f * 1e6,
+         f"total_speedup={t_e/t_f:.2f}x; data_movement~"
+         f"{move_e/move_f:.1f}x (paper: 3.3x movement, 1.0x kernel)")
+
+    # passthrough: a 32-block transfer stream (pure data movement)
+    n, floats = 32, 4096
+    prog_p = rctc.compile_passthrough((floats,))
+    bp = rbl.bind(prog_p, inputs={})
+    xs = {f"in{i}": rng.randn(floats).astype(np.float32) for i in range(n)}
+
+    def p_eager():
+        for i in range(n):
+            ex.run(bp, inputs={"input": xs[f"in{i}"]})
+
+    stacked = np.stack([xs[f"in{i}"] for i in range(n)])
+    sp = rctc.compile_passthrough((n, floats))
+    fp = ex.fuse(rbl.bind(sp, inputs={}))
+
+    t_pe = min(_time(p_eager, 10))
+    t_pf = min(_time(lambda: jax.block_until_ready(
+        fp({"input": stacked}, {})), 10))
+    emit("table5/passthrough_eager", t_pe / n * 1e6, "us per transfer")
+    emit("table5/passthrough_fused", t_pf / n * 1e6,
+         f"total_speedup={t_pe/t_pf:.2f}x (paper: 3.0x)")
+
+
+# ---------------------------------------------------------------------------
+# Table 2: resource utilization + time-to-network-ready
+# ---------------------------------------------------------------------------
+
+def table2_resource_utilization(rng=None) -> None:
+    # full-size ResNet-18 weights (the paper's 12.63 MB is the INT8 image;
+    # fp32 folded is ~46 MB) so fixed overheads are in realistic proportion
+    rng = rng or np.random.RandomState(0)
+    cfg = __import__("repro.configs.resnet18", fromlist=["CONFIG"]).CONFIG
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    folded = rn.fold_bn(params)
+    prog, image = rctc.compile_resnet18(cfg, folded, batch=1)
+
+    # image size: RIMFS vs OS-stack analogue (pickle of the weight dict)
+    blob_os = pickle.dumps({k: np.asarray(v) for k, v in folded.items()})
+    emit("table2/image_rimfs_bytes", 0.0, f"{len(image)}")
+    emit("table2/image_pickle_bytes", 0.0,
+         f"{len(blob_os)}; ratio={len(blob_os)/len(image):.2f}x")
+
+    # runtime memory overhead: RIMFS index vs full deserialization copies
+    fs = rimfs.mount(image)
+    emit("table2/runtime_overhead_rimfs", 0.0,
+         f"{fs.overhead_bytes()}B "
+         f"({fs.overhead_bytes()/fs.total_bytes():.2%})")
+
+    # time-to-service: zero-copy mount+bind vs deserialize+copy+stage.
+    # (CRC verification is per-message on the wire in the paper; at mount
+    # time it is on-demand, so the boot path stays O(header).)
+    def aeg_boot():
+        plat = Platform()
+        plat.provision(image=image, program_bytes=prog.encode(),
+                       verify=False)
+        plat.bind()
+
+    def os_boot():
+        # OS-stack analogue: full deserialization + per-tensor copies +
+        # device staging of every tensor
+        w = pickle.loads(blob_os)
+        w = {k: jnp.asarray(np.array(v, copy=True)) for k, v in w.items()}
+        jax.block_until_ready(list(w.values()))
+
+    t_aeg = min(_time(aeg_boot, 10))
+    t_os = min(_time(os_boot, 10))
+    emit("table2/time_to_service_aeg", t_aeg * 1e6, "")
+    emit("table2/time_to_service_os", t_os * 1e6,
+         f"ratio={t_os/t_aeg:.1f}x (paper: 350-745x vs Linux boot)")
+
+
+# ---------------------------------------------------------------------------
+# Table 3 / Fig 3: ResNet-18 inference latency, CV, per-device efficiency
+# ---------------------------------------------------------------------------
+
+def table3_resnet_inference(rng=None, iters: int = 200) -> None:
+    rng = rng or np.random.RandomState(0)
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    folded = rn.fold_bn(params)
+    prog, image = rctc.compile_resnet18(cfg, folded, batch=1)
+    fs = rimfs.mount(image)
+    ex = Executor()
+    x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
+
+    bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    lat_e = _time(lambda: ex.run(bound), iters, warmup=10)
+
+    bound2 = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound2)
+    w = ex.weights_from(bound2)
+    lat_f = _time(lambda: jax.block_until_ready(fused({"input": x}, w)),
+                  iters, warmup=10)
+
+    def cv(xs):
+        # trimmed CV (drop top/bottom 5%): the paper discards warm-up
+        # iterations; trimming also rejects host-contention outliers
+        xs = sorted(xs)[len(xs) // 20: -max(1, len(xs) // 20)]
+        return statistics.stdev(xs) / statistics.fmean(xs) * 100
+
+    mu_e, mu_f = statistics.fmean(lat_e), statistics.fmean(lat_f)
+    emit("table3/eager_latency", mu_e * 1e6, f"cv={cv(lat_e):.2f}%")
+    emit("table3/fused_latency", mu_f * 1e6, f"cv={cv(lat_f):.2f}%")
+    # compute efficiency := throughput per device (1 device on this box)
+    emit("table3/efficiency_ratio", 0.0,
+         f"fused/eager={(1/mu_f)/(1/mu_e):.2f}x (paper: 9.2x per tile); "
+         f"cv_ratio={cv(lat_e)/max(cv(lat_f),1e-9):.1f}x (paper: 21x)")
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels (interpret mode — correctness-path timing only)
+# ---------------------------------------------------------------------------
+
+def kernel_microbench(rng=None) -> None:
+    rng = rng or np.random.RandomState(0)
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.int8_matmul.ops import int8_matmul
+    q = jnp.asarray(rng.randn(1, 128, 4, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 128, 2, 64), jnp.float32)
+    v = jnp.asarray(rng.randn(1, 128, 2, 64), jnp.float32)
+    t = min(_time(lambda: flash_attention(q, k, v).block_until_ready(), 5))
+    emit("kernels/flash_attention_interpret", t * 1e6, "vs ref in tests")
+    xi = jnp.asarray(rng.randint(-127, 128, (128, 128)), jnp.int8)
+    wi = jnp.asarray(rng.randint(-127, 128, (128, 128)), jnp.int8)
+    s = jnp.asarray(rng.rand(128).astype(np.float32))
+    t = min(_time(lambda: int8_matmul(xi, wi, s).block_until_ready(), 5))
+    emit("kernels/int8_matmul_interpret", t * 1e6, "vs ref in tests")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    table1_transfer_overhead(total_mb=1.0 if args.quick else 4.0)
+    table45_kernel_breakdowns()
+    table2_resource_utilization()
+    table3_resnet_inference(iters=50 if args.quick else 200)
+    kernel_microbench()
+    print(f"# {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

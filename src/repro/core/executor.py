@@ -1,0 +1,189 @@
+"""The generic RCB executor — cyclic Fetch-Decode-Dispatch.
+
+The executor knows nothing about models: it walks the linear op stream and
+invokes RHAL vtable slots. Two modes reproduce the paper's central
+comparison on TPU terms:
+
+  * ``eager``  — every op is dispatched as its own device computation with a
+    host synchronization after it (per-op fixed cost: the OS-mediated /
+    Vitis-AI analogue). Per-op wall times are recorded for the benchmark
+    harness.
+  * ``fused``  — the *same* program and the *same* dispatch loop run once
+    under ``jax.jit`` via the trace driver, collapsing the whole RCB stream
+    into one XLA executable (the baremetal analogue: one dispatch per step,
+    zero host round-trips inside).
+
+Equivalence of the two modes over the whole op vocabulary is enforced by
+tests/test_executor.py — the paper's "same RCBs drive different execution
+environments" portability property.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import rhal as rhal_mod
+from repro.core.rbl import BoundProgram
+from repro.core.rcb import Op, RCBProgram
+
+
+@dataclasses.dataclass
+class OpTrace:
+    block_id: int
+    op: Op
+    seconds: float
+
+
+class Executor:
+    def __init__(self, driver: Optional[rhal_mod.HalDriver] = None,
+                 rtpm=None):
+        self.driver = driver or rhal_mod.make_eager_driver()
+        self.rtpm = rtpm
+        self.op_traces: list[OpTrace] = []
+
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, driver, op, buffers, free_after: Optional[dict],
+                  idx: int, rimfs):
+        """Decode + dispatch one RCBOp through the vtable."""
+        if op.op == Op.NOP or op.op == Op.HALT:
+            return
+        if op.op == Op.ALLOC:
+            buffers[op.dsts[0]] = driver.alloc(tuple(op.attrs["shape"]),
+                                               op.attrs["dtype"])
+        elif op.op == Op.FREE:
+            driver.free(buffers.pop(op.dsts[0], None))
+        elif op.op == Op.BIND_CONST:
+            buffers[op.dsts[0]] = driver.bind_const(op.attrs["value"])
+        elif op.op == Op.DMA_H2D:
+            src = op.srcs[0]
+            host = buffers.get(src)
+            if host is None and rimfs is not None:
+                host = rimfs.read(src)
+            buffers[op.dsts[0]] = driver.wait_dma(
+                driver.initiate_dma(host, "h2d"))
+        elif op.op == Op.DMA_D2H:
+            buffers[op.dsts[0]] = driver.wait_dma(
+                driver.initiate_dma(buffers[op.srcs[0]], "d2h"))
+        elif op.op == Op.DMA_D2D:
+            buffers[op.dsts[0]] = driver.wait_dma(
+                driver.initiate_dma(buffers[op.srcs[0]], "d2d"))
+        elif op.op == Op.GRAPH_EXEC:
+            fn = self._artifact(op.attrs["artifact"])
+            outs = fn(*[buffers[s] for s in op.srcs])
+            if len(op.dsts) == 1:
+                buffers[op.dsts[0]] = outs
+            else:
+                for d, o in zip(op.dsts, outs):
+                    buffers[d] = o
+        elif op.op == Op.COLLECTIVE:
+            buffers[op.dsts[0]] = driver.collective(
+                op.attrs.get("kind", "all_reduce"), buffers[op.srcs[0]],
+                op.attrs)
+        elif op.op == Op.FENCE:
+            driver.fence(list(buffers.values()))
+        elif op.op == Op.POLL:
+            driver.poll(buffers.get(op.srcs[0]) if op.srcs else None)
+        else:                                    # compute dispatch
+            srcs = [buffers[s] for s in op.srcs]
+            buffers[op.dsts[0]] = driver.dispatch_compute(op.op, srcs,
+                                                          op.attrs)
+        # buffer lifetime management (RBL liveness plan)
+        if free_after is not None:
+            for s in op.srcs:
+                if free_after.get(s) == idx:
+                    t = self._prog.tensors.get(s)
+                    if t is not None and t.kind == "scratch":
+                        driver.free(buffers.pop(s, None))
+
+    def _artifact(self, name: str) -> Callable:
+        fn = self._prog.artifacts.get(name)
+        if fn is None:
+            raise KeyError(f"GRAPH_EXEC artifact {name!r} not attached")
+        return fn
+
+    # --------------------------------------------------------------- eager
+    def run(self, bound: BoundProgram, inputs: Optional[dict] = None,
+            rimfs=None, trace_ops: bool = False,
+            probe: Optional[dict] = None) -> dict:
+        """Interpret the program op-by-op (eager / OS-mediated analogue).
+
+        ``probe``: optional dict filled with per-symbol abs-max of every
+        produced buffer — used by INT8 calibration (core/quant.py).
+        """
+        self._prog = bound.program
+        buffers = dict(bound.buffers)
+        if inputs:
+            buffers.update(inputs)
+        for sym in bound.missing_inputs:
+            if sym not in buffers:
+                raise ValueError(f"missing input {sym!r}")
+        if probe is not None:
+            for sym, buf in buffers.items():
+                probe[sym] = max(probe.get(sym, 0.0),
+                                 float(np.max(np.abs(np.asarray(buf)))))
+        idx = 0
+        for block in bound.program.blocks:
+            t_blk = time.perf_counter()
+            for op in block.ops:
+                t0 = time.perf_counter()
+                self._dispatch(self.driver, op, buffers, bound.last_use,
+                               idx, rimfs)
+                if trace_ops:
+                    self.op_traces.append(
+                        OpTrace(block.block_id, op.op,
+                                time.perf_counter() - t0))
+                if probe is not None:
+                    for dd in op.dsts:
+                        if dd in buffers:
+                            probe[dd] = max(
+                                probe.get(dd, 0.0),
+                                float(np.max(np.abs(np.asarray(buffers[dd])))))
+                idx += 1
+            if self.rtpm is not None:
+                self.rtpm.post("rcb_complete",
+                               {"block": block.block_id,
+                                "seconds": time.perf_counter() - t_blk})
+        return {name: buffers[name]
+                for name, t in bound.program.tensors.items()
+                if t.kind == "output" and name in buffers}
+
+    # --------------------------------------------------------------- fused
+    def fuse(self, bound: BoundProgram, donate_weights: bool = False):
+        """Stage the whole program into one jitted callable.
+
+        Returns ``fn(inputs: dict, weights: dict) -> outputs: dict`` — a
+        single XLA program per RCB stream (the baremetal analogue).
+        """
+        self._prog = bound.program
+        prog = bound.program
+        weight_names = sorted(n for n, t in prog.tensors.items()
+                              if t.kind == "weight")
+        input_names = sorted(n for n, t in prog.tensors.items()
+                             if t.kind == "input")
+        trace_driver = rhal_mod.make_trace_driver()
+
+        def staged(inputs: dict, weights: dict) -> dict:
+            buffers = {}
+            buffers.update({k: weights[k] for k in weight_names})
+            buffers.update({k: inputs[k] for k in input_names})
+            idx = 0
+            for block in prog.blocks:
+                for op in block.ops:
+                    self._dispatch(trace_driver, op, buffers, None, idx,
+                                   None)
+                    idx += 1
+            return {name: buffers[name]
+                    for name, t in prog.tensors.items()
+                    if t.kind == "output" and name in buffers}
+
+        donate = (1,) if donate_weights else ()
+        return jax.jit(staged, donate_argnums=donate)
+
+    # ------------------------------------------------------------- helpers
+    def weights_from(self, bound: BoundProgram) -> dict:
+        return {n: b for n, b in bound.buffers.items()
+                if bound.program.tensors[n].kind == "weight"}

@@ -1,0 +1,130 @@
+"""Pure-JAX semantics for every RCB compute op.
+
+One function per opcode; both RHAL drivers (eager CPU-interpret and fused
+XLA) dispatch through this table, so the two execution modes are equivalent
+by construction — the paper's portability claim, testable.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rcb import Op
+
+
+def gemm(a, b, attrs):
+    ta, tb = attrs.get("ta", False), attrs.get("tb", False)
+    a = a.T if ta else a
+    b = b.T if tb else b
+    return jnp.matmul(a, b)
+
+
+def gemm_i8(a, b, attrs):
+    return jax.lax.dot(a, b, preferred_element_type=jnp.int32)
+
+
+def conv2d(x, w, attrs):
+    """x: (N,H,W,C), w: (KH,KW,C,O)."""
+    stride = tuple(attrs.get("stride", (1, 1)))
+    padding = attrs.get("padding", "SAME")
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv2d_i8(x, w, attrs):
+    stride = tuple(attrs.get("stride", (1, 1)))
+    padding = attrs.get("padding", "SAME")
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=stride, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+
+
+def dense(x, w, b=None, attrs=None):
+    y = jnp.matmul(x, w)
+    if b is not None:
+        y = y + b
+    return y
+
+
+def add(a, b, attrs):
+    return a + b
+
+
+def relu(x, attrs):
+    return jnp.maximum(x, 0)
+
+
+def softmax(x, attrs):
+    return jax.nn.softmax(x.astype(jnp.float32),
+                          axis=attrs.get("axis", -1)).astype(x.dtype)
+
+
+def maxpool(x, attrs):
+    win = tuple(attrs.get("window", (2, 2)))
+    stride = tuple(attrs.get("stride", win))
+    pad = attrs.get("padding", "VALID")
+    if pad == "SAME":
+        pads = jax.lax.padtype_to_pads(
+            x.shape, (1, *win, 1), (1, *stride, 1), "SAME")
+    else:
+        pads = [(0, 0)] * x.ndim
+    init = (-jnp.inf if jnp.issubdtype(x.dtype, jnp.floating)
+            else jnp.iinfo(x.dtype).min)
+    return jax.lax.reduce_window(
+        x, init, jax.lax.max, (1, *win, 1), (1, *stride, 1), pads)
+
+
+def avgpool_global(x, attrs):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def scale_shift(x, scale, shift, attrs=None):
+    return x * scale + shift
+
+
+def quantize(x, attrs):
+    scale = attrs["scale"]
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize(x, attrs):
+    return x.astype(jnp.float32) * attrs["scale"]
+
+
+def reshape(x, attrs):
+    return jnp.reshape(x, tuple(attrs["shape"]))
+
+
+def passthrough(x, attrs):
+    return x
+
+
+_TABLE: dict[Op, Callable] = {
+    Op.GEMM: lambda srcs, attrs: gemm(srcs[0], srcs[1], attrs),
+    Op.GEMM_I8: lambda srcs, attrs: gemm_i8(srcs[0], srcs[1], attrs),
+    Op.CONV2D: lambda srcs, attrs: conv2d(srcs[0], srcs[1], attrs),
+    Op.CONV2D_I8: lambda srcs, attrs: conv2d_i8(srcs[0], srcs[1], attrs),
+    Op.DENSE: lambda srcs, attrs: dense(*srcs, attrs=attrs),
+    Op.ADD: lambda srcs, attrs: add(srcs[0], srcs[1], attrs),
+    Op.RELU: lambda srcs, attrs: relu(srcs[0], attrs),
+    Op.SOFTMAX: lambda srcs, attrs: softmax(srcs[0], attrs),
+    Op.MAXPOOL: lambda srcs, attrs: maxpool(srcs[0], attrs),
+    Op.AVGPOOL_GLOBAL: lambda srcs, attrs: avgpool_global(srcs[0], attrs),
+    Op.SCALE_SHIFT: lambda srcs, attrs: scale_shift(*srcs, attrs=attrs),
+    Op.QUANTIZE: lambda srcs, attrs: quantize(srcs[0], attrs),
+    Op.DEQUANT: lambda srcs, attrs: dequantize(srcs[0], attrs),
+    Op.RESHAPE: lambda srcs, attrs: reshape(srcs[0], attrs),
+    Op.PASSTHROUGH: lambda srcs, attrs: passthrough(srcs[0], attrs),
+}
+
+
+def compute(op: Op, srcs, attrs):
+    """Execute one compute opcode on already-bound operands."""
+    fn = _TABLE.get(op)
+    if fn is None:
+        raise NotImplementedError(f"no semantics for {op!r}")
+    return fn(srcs, attrs)

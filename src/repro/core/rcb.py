@@ -1,0 +1,229 @@
+"""Runtime Control Blocks — the paper's "Control as Data" representation.
+
+An RCB is *not* executable code: it is a binary data structure holding a
+linear sequence of low-level operations (register-write analogues, DMA
+triggers, compute dispatches, fences) that encode the complete execution
+semantics of an ML workload. A generic engine (core/executor.py) runs RCBs
+through the RHAL vtable without knowing anything about the model.
+
+Faithfulness to the paper:
+  * RCBs are hardware-independent; tensor references are *symbolic* IDs
+    resolved by the Runtime Binding Layer at load time (never raw pointers).
+  * Each RCB has a Header (type / size / dependency info) and an Operation
+    Payload (structured op sequence).
+  * RCBs serialize to a flat binary format with CRC-32 integrity (the same
+    IEEE 0x04C11DB7 polynomial the paper uses on its network messages), so
+    a model really is provisioned as *data* over the wire.
+
+TPU adaptation (see DESIGN.md §2): the op vocabulary is re-based on the XLA
+execution model — buffer ops, fused-compute dispatches and collectives
+replace AIE CSR writes — while the encoding stays linear and symbolic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import struct
+import zlib
+from typing import Any, Iterable, Optional
+
+MAGIC = b"RCB1"
+PROG_MAGIC = b"AEGP"
+
+
+class Op(enum.IntEnum):
+    """Operation vocabulary (linear, hardware-agnostic)."""
+    NOP = 0
+    # --- buffer table / "register" ops ------------------------------------
+    ALLOC = 1            # dst, attrs: shape,dtype — scratch allocation
+    FREE = 2             # dst
+    BIND_CONST = 3       # dst, attrs: value — small immediate constant
+    # --- DMA ops (RHAL initiate_dma/wait_dma) ------------------------------
+    DMA_H2D = 10         # dst, src(file id in RIMFS)
+    DMA_D2H = 11         # dst(host id), src
+    DMA_D2D = 12         # dst, src
+    # --- compute dispatches (RHAL dispatch_compute) ------------------------
+    GEMM = 20            # dst, a, b, attrs: transpose flags, acc dtype
+    CONV2D = 21          # dst, x, w, attrs: stride, padding
+    DENSE = 22           # dst, x, w, b?
+    ADD = 23             # dst, a, b
+    RELU = 24            # dst, x
+    SOFTMAX = 25         # dst, x
+    MAXPOOL = 26         # dst, x, attrs: window, stride, padding
+    AVGPOOL_GLOBAL = 27  # dst, x
+    SCALE_SHIFT = 28     # dst, x, scale, shift  (folded batchnorm)
+    QUANTIZE = 29        # dst, x, attrs: scale (fp -> int8)
+    DEQUANT = 30         # dst, x, attrs: scale (int32/int8 -> fp)
+    RESHAPE = 31         # dst, x, attrs: shape
+    GEMM_I8 = 32         # dst, a(int8), b(int8) -> int32 accum
+    CONV2D_I8 = 33       # dst, x(int8), w(int8), attrs -> int32 accum
+    PASSTHROUGH = 34     # dst, x — identity (paper's transfer microbenchmark)
+    # --- graph artifacts (compiled ADF-graph analogue) ----------------------
+    GRAPH_EXEC = 40      # dsts, srcs, attrs: artifact id (jitted step fn)
+    # --- distribution -------------------------------------------------------
+    COLLECTIVE = 50      # dst, src, attrs: kind, axis
+    # --- synchronization (RHAL fence/poll) ----------------------------------
+    FENCE = 60           #
+    POLL = 61            # src, attrs: expected completion flag
+    HALT = 62            #
+
+
+@dataclasses.dataclass(frozen=True)
+class RCBOp:
+    op: Op
+    dsts: tuple = ()          # symbolic tensor ids (str)
+    srcs: tuple = ()
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+    def encode(self) -> bytes:
+        meta = json.dumps(
+            {"d": list(self.dsts), "s": list(self.srcs), "a": self.attrs},
+            separators=(",", ":")).encode()
+        return struct.pack("<HI", int(self.op), len(meta)) + meta
+
+    @staticmethod
+    def decode(buf: memoryview, off: int) -> tuple["RCBOp", int]:
+        op, n = struct.unpack_from("<HI", buf, off)
+        off += 6
+        meta = json.loads(bytes(buf[off:off + n]).decode())
+        off += n
+        return RCBOp(Op(op), tuple(meta["d"]), tuple(meta["s"]),
+                     meta["a"]), off
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorDesc:
+    """Symbol-table entry: logical tensor -> physical requirements.
+
+    ``kind``: weight (RIMFS-backed) | input | output | scratch.
+    ``axes``: logical axis names consumed by RBL's sharding resolution.
+    """
+    name: str
+    shape: tuple
+    dtype: str
+    kind: str
+    axes: tuple = ()
+
+    def encode(self) -> bytes:
+        meta = json.dumps({"n": self.name, "sh": list(self.shape),
+                           "dt": self.dtype, "k": self.kind,
+                           "ax": list(self.axes)},
+                          separators=(",", ":")).encode()
+        return struct.pack("<I", len(meta)) + meta
+
+    @staticmethod
+    def decode(buf: memoryview, off: int) -> tuple["TensorDesc", int]:
+        (n,) = struct.unpack_from("<I", buf, off)
+        off += 4
+        m = json.loads(bytes(buf[off:off + n]).decode())
+        off += n
+        return TensorDesc(m["n"], tuple(m["sh"]), m["dt"], m["k"],
+                          tuple(m["ax"] or ())), off
+
+
+@dataclasses.dataclass(frozen=True)
+class RCB:
+    """Header + operation payload."""
+    block_id: int
+    block_type: str                 # "layer" | "transfer" | "control" | ...
+    deps: tuple = ()                # block ids this RCB waits on
+    ops: tuple = ()                 # tuple[RCBOp]
+
+    def encode(self) -> bytes:
+        payload = b"".join(op.encode() for op in self.ops)
+        hdr_meta = json.dumps({"t": self.block_type, "deps": list(self.deps)},
+                              separators=(",", ":")).encode()
+        header = struct.pack("<4sIIHI", MAGIC, self.block_id, len(payload),
+                             len(self.ops), len(hdr_meta)) + hdr_meta
+        crc = zlib.crc32(header + payload) & 0xFFFFFFFF
+        return header + payload + struct.pack("<I", crc)
+
+    @staticmethod
+    def decode(buf: memoryview, off: int = 0) -> tuple["RCB", int]:
+        magic, block_id, plen, n_ops, hlen = struct.unpack_from(
+            "<4sIIHI", buf, off)
+        if magic != MAGIC:
+            raise ValueError(f"bad RCB magic {magic!r}")
+        hdr_end = off + 18 + hlen
+        body_end = hdr_end + plen
+        # integrity FIRST — nothing inside the block is parsed before the
+        # CRC over header+payload checks out (torn/corrupt provisioning).
+        (crc,) = struct.unpack_from("<I", buf, body_end)
+        actual = zlib.crc32(bytes(buf[off:body_end])) & 0xFFFFFFFF
+        if crc != actual:
+            raise ValueError(f"RCB {block_id}: CRC mismatch "
+                             f"({crc:#x} != {actual:#x})")
+        meta = json.loads(bytes(buf[off + 18:hdr_end]).decode())
+        ops = []
+        o = hdr_end
+        for _ in range(n_ops):
+            op, o = RCBOp.decode(buf, o)
+            ops.append(op)
+        return RCB(block_id, meta["t"], tuple(meta["deps"]),
+                   tuple(ops)), body_end + 4
+
+
+@dataclasses.dataclass
+class RCBProgram:
+    """A full workload: symbol table + ordered RCBs + artifact registry.
+
+    ``artifacts`` maps GRAPH_EXEC ids to python callables (the "compiled ADF
+    graph" analogues — jitted step functions). They are not serialized; on
+    deserialization the binding layer re-attaches them by name, exactly like
+    the paper re-attaches precompiled AIE kernels referenced from RCBs.
+    """
+    name: str
+    tensors: dict           # name -> TensorDesc
+    blocks: list            # list[RCB]
+    artifacts: dict = dataclasses.field(default_factory=dict)
+
+    # ------------------------------------------------------------- binary io
+    def encode(self) -> bytes:
+        tensec = b"".join(t.encode() for t in self.tensors.values())
+        blocks = b"".join(b.encode() for b in self.blocks)
+        name = self.name.encode()
+        hdr = struct.pack("<4sHIHII", PROG_MAGIC, 1, len(name),
+                          len(self.tensors), len(self.blocks), len(tensec))
+        body = hdr + name + tensec + blocks
+        return body + struct.pack("<I", zlib.crc32(body) & 0xFFFFFFFF)
+
+    @staticmethod
+    def decode(data: bytes) -> "RCBProgram":
+        buf = memoryview(data)
+        magic, ver, nlen, n_t, n_b, tlen = struct.unpack_from("<4sHIHII", buf)
+        if magic != PROG_MAGIC:
+            raise ValueError(f"bad program magic {magic!r}")
+        (crc,) = struct.unpack_from("<I", buf, len(data) - 4)
+        if crc != (zlib.crc32(data[:-4]) & 0xFFFFFFFF):
+            raise ValueError("RCBProgram CRC mismatch")
+        off = struct.calcsize("<4sHIHII")
+        name = bytes(buf[off:off + nlen]).decode()
+        off += nlen
+        tensors = {}
+        for _ in range(n_t):
+            t, off = TensorDesc.decode(buf, off)
+            tensors[t.name] = t
+        blocks = []
+        for _ in range(n_b):
+            b, off = RCB.decode(buf, off)
+            blocks.append(b)
+        return RCBProgram(name, tensors, blocks)
+
+    # ------------------------------------------------------------- utilities
+    def ops(self) -> Iterable[RCBOp]:
+        for b in self.blocks:
+            for op in b.ops:
+                yield op
+
+    def validate(self) -> None:
+        """Static checks: every symbolic ref has a descriptor; deps exist."""
+        ids = {b.block_id for b in self.blocks}
+        for b in self.blocks:
+            for d in b.deps:
+                if d not in ids:
+                    raise ValueError(f"RCB {b.block_id}: missing dep {d}")
+        for op in self.ops():
+            for ref in (*op.dsts, *op.srcs):
+                if ref not in self.tensors:
+                    raise ValueError(f"unbound symbolic ref {ref!r}")

@@ -1,0 +1,288 @@
+"""RCTC — the offline toolchain (forward translation / data packaging /
+mapping generation).
+
+Mirrors the paper's three toolchain functions:
+
+  1. **Forward translation** — network descriptions (ResNet-18 stages, small
+     pipelines, LM serve/train graphs) flatten into symbolic RCB op
+     sequences. Fine-grained programs (one op per conv/relu/... — the AIE
+     kernel granularity) serve the case study and microbenchmarks; LM-scale
+     workloads translate to provisioning/bind/dispatch RCBs around
+     GRAPH_EXEC artifacts, exactly like the paper ingests *compiled ADF
+     graph artifacts* rather than re-lowering kernels.
+  2. **Data packaging** — weights flatten into a RIMFS image (binary blob).
+  3. **Mapping generation** — TensorDescs carry logical shapes/axes that the
+     RBL resolves to physical buffers/shardings at load time.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.configs.resnet18 import ResNetConfig
+from repro.core import rimfs as rimfs_mod
+from repro.core.rcb import Op, RCB, RCBOp, RCBProgram, TensorDesc
+from repro.models import resnet as resnet_mod
+
+
+class _Builder:
+    """Incremental RCB program builder."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.tensors: dict[str, TensorDesc] = {}
+        self.blocks: list[RCB] = []
+        self._ops: list[RCBOp] = []
+        self._bid = 0
+        self._uniq = 0
+
+    def tensor(self, name, shape, dtype, kind, axes=()):
+        self.tensors[name] = TensorDesc(name, tuple(shape), dtype, kind,
+                                        tuple(axes))
+        return name
+
+    def scratch(self, shape, dtype, hint="t"):
+        self._uniq += 1
+        return self.tensor(f"{hint}.{self._uniq}", shape, dtype, "scratch")
+
+    def emit(self, op: Op, dsts=(), srcs=(), **attrs):
+        self._ops.append(RCBOp(op, tuple(dsts), tuple(srcs), attrs))
+
+    def close_block(self, block_type="layer", deps="prev"):
+        if not self._ops:
+            return
+        if deps == "prev":
+            deps = (self._bid - 1,) if self._bid > 0 else ()
+        self.blocks.append(RCB(self._bid, block_type, tuple(deps),
+                               tuple(self._ops)))
+        self._bid += 1
+        self._ops = []
+
+    def build(self, artifacts: Optional[dict] = None) -> RCBProgram:
+        self.close_block()
+        prog = RCBProgram(self.name, self.tensors, self.blocks,
+                          artifacts or {})
+        prog.validate()
+        return prog
+
+
+# ---------------------------------------------------------------------------
+# Microbenchmark programs (paper §3.4: pass-through and 64x64 matmul)
+# ---------------------------------------------------------------------------
+
+def compile_passthrough(shape, dtype="float32") -> RCBProgram:
+    b = _Builder("passthrough")
+    b.tensor("input", shape, dtype, "input")
+    b.tensor("output", shape, dtype, "output")
+    b.emit(Op.PASSTHROUGH, ["output"], ["input"])
+    b.emit(Op.FENCE)
+    return b.build()
+
+
+def compile_transfer_chain(n: int, block_shape, dtype="float32") -> RCBProgram:
+    """n independent block transfers flattened into ONE control stream —
+    the Table 1 "baremetal" side: per-transfer control cost paid once for
+    the whole stream instead of once per block."""
+    b = _Builder(f"chain_{n}")
+    for i in range(n):
+        b.tensor(f"in{i}", block_shape, dtype, "input")
+        b.tensor(f"out{i}", block_shape, dtype, "output")
+        b.emit(Op.PASSTHROUGH, [f"out{i}"], [f"in{i}"])
+    b.emit(Op.FENCE)
+    return b.build()
+
+
+def compile_matmul(n=64, dtype="float32", with_dma: bool = False) -> RCBProgram:
+    """64x64 XGEMM (paper §3.4). ``with_dma`` adds explicit input/output
+    DMA stages so the Table 4 breakdown (input transfer / kernel exec /
+    output transfer) is measurable per op."""
+    b = _Builder(f"xgemm_{n}")
+    b.tensor("a", (n, n), dtype, "input")
+    b.tensor("b", (n, n), dtype, "weight")
+    b.tensor("output", (n, n), dtype, "output")
+    if with_dma:
+        ad = b.scratch((n, n), dtype, "a_dev")
+        b.emit(Op.DMA_H2D, [ad], ["a"])
+        od = b.scratch((n, n), dtype, "o_dev")
+        b.emit(Op.GEMM, [od], [ad, "b"])
+        b.emit(Op.DMA_D2H, ["output"], [od])
+    else:
+        b.emit(Op.GEMM, ["output"], ["a", "b"])
+    b.emit(Op.FENCE)
+    return b.build()
+
+
+def compile_conv_relu_softmax(n=1, h=8, w=8, cin=3, cout=9) -> RCBProgram:
+    """The paper's data-path correctness pipeline (Conv2D->ReLU->Softmax)."""
+    b = _Builder("conv_relu_softmax")
+    b.tensor("input", (n, h, w, cin), "float32", "input")
+    b.tensor("w_conv", (3, 3, cin, cout), "float32", "weight")
+    t1 = b.scratch((n, h, w, cout), "float32")
+    b.emit(Op.CONV2D, [t1], ["input", "w_conv"], stride=(1, 1),
+           padding="SAME")
+    t2 = b.scratch((n, h, w, cout), "float32")
+    b.emit(Op.RELU, [t2], [t1])
+    t3 = b.scratch((n, cout), "float32")
+    b.emit(Op.AVGPOOL_GLOBAL, [t3], [t2])
+    b.tensor("output", (n, cout), "float32", "output")
+    b.emit(Op.SOFTMAX, ["output"], [t3])
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 forward translation (fp32 and INT8)
+# ---------------------------------------------------------------------------
+
+def _emit_conv_bn_relu(b: _Builder, x, wname, scale, shift, out_shape,
+                       stride, relu=True, int8: Optional[dict] = None,
+                       x_scale: float = 1.0):
+    """One conv+foldedBN(+relu) stage; int8 mode quantizes around the conv."""
+    if int8 is None:
+        t = b.scratch(out_shape, "float32")
+        b.emit(Op.CONV2D, [t], [x, wname], stride=(stride, stride),
+               padding="SAME")
+    else:
+        xq = b.scratch(b.tensors[x].shape, "int8")
+        b.emit(Op.QUANTIZE, [xq], [x], scale=x_scale)
+        ti = b.scratch(out_shape, "int32")
+        b.emit(Op.CONV2D_I8, [ti], [xq, wname], stride=(stride, stride),
+               padding="SAME")
+        t = b.scratch(out_shape, "float32")
+        # requant: int32 * (x_scale * w_scale_per_channel), then +shift
+        b.emit(Op.SCALE_SHIFT, [t], [ti, int8["requant_scale"],
+                                     int8["zero"]])
+    t2 = b.scratch(out_shape, "float32")
+    b.emit(Op.SCALE_SHIFT, [t2], [t, scale, shift])
+    if not relu:
+        return t2
+    t3 = b.scratch(out_shape, "float32")
+    b.emit(Op.RELU, [t3], [t2])
+    return t3
+
+
+def compile_resnet18(cfg: ResNetConfig, folded: dict, batch: int = 1,
+                     int8: Optional[dict] = None):
+    """Translate ResNet-18 into (RCBProgram, RIMFS image bytes).
+
+    ``folded``: BN-folded weights from models/resnet.fold_bn.
+    ``int8``: optional quantization pack from core/quant.quantize_resnet —
+    {weights int8, requant scales, activation scales} (paper deploys INT8).
+    """
+    b = _Builder("resnet18_int8" if int8 else "resnet18")
+    img = cfg.image_size
+    files: dict[str, np.ndarray] = {}
+
+    def weight(name, arr, dtype=None):
+        arr = np.asarray(arr)
+        files[name] = arr
+        b.tensor(name, arr.shape, str(arr.dtype), "weight")
+        return name
+
+    def act_scale(name):
+        return float(int8["act_scales"][name]) if int8 else 1.0
+
+    wsrc = int8["weights"] if int8 else folded
+    b.tensor("input", (batch, img, img, 3), "float32", "input")
+
+    def conv_pack(prefix, key):
+        w = weight(key, wsrc[key])
+        scale = weight(key + ".bn_scale", folded[prefix + "_scale"])
+        shift = weight(key + ".bn_shift", folded[prefix + "_shift"])
+        pack = None
+        if int8:
+            pack = {
+                "requant_scale": weight(key + ".rq",
+                                        int8["requant"][key]),
+                "zero": weight(key + ".zero",
+                               np.zeros_like(int8["requant"][key])),
+            }
+        return w, scale, shift, pack
+
+    # stem
+    w, sc, sh, pk = conv_pack("stem_bn", "stem_conv")
+    h = img // 2
+    x = _emit_conv_bn_relu(b, "input", w, sc, sh, (batch, h, h,
+                                                   cfg.stem_width), 2,
+                           int8=pk, x_scale=act_scale("stem_conv"))
+    b.close_block()
+    if img >= 64:
+        t = b.scratch((batch, h // 2, h // 2, cfg.stem_width), "float32")
+        b.emit(Op.MAXPOOL, [t], [x], window=(3, 3), stride=(2, 2),
+               padding="SAME")
+        x = t
+        h = h // 2
+        b.close_block()
+
+    cin = cfg.stem_width
+    for si, (n_blocks, width) in enumerate(zip(cfg.stage_sizes,
+                                               cfg.stage_widths)):
+        for bi in range(n_blocks):
+            pre = f"s{si}b{bi}_"
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h_out = h // stride
+            shp = (batch, h_out, h_out, width)
+            res = x
+            w1, sc1, sh1, pk1 = conv_pack(pre + "bn1", pre + "conv1")
+            y = _emit_conv_bn_relu(b, x, w1, sc1, sh1, shp, stride,
+                                   int8=pk1, x_scale=act_scale(pre + "conv1"))
+            w2, sc2, sh2, pk2 = conv_pack(pre + "bn2", pre + "conv2")
+            y = _emit_conv_bn_relu(b, y, w2, sc2, sh2, shp, 1, relu=False,
+                                   int8=pk2, x_scale=act_scale(pre + "conv2"))
+            if (pre + "proj") in folded:
+                wp, scp, shp_, pkp = conv_pack(pre + "proj_bn", pre + "proj")
+                res = _emit_conv_bn_relu(b, x, wp, scp, shp_, shp, stride,
+                                         relu=False, int8=pkp,
+                                         x_scale=act_scale(pre + "proj"))
+            t = b.scratch(shp, "float32")
+            b.emit(Op.ADD, [t], [y, res])
+            t2 = b.scratch(shp, "float32")
+            b.emit(Op.RELU, [t2], [t])
+            x = t2
+            h = h_out
+            cin = width
+            b.close_block()
+
+    t = b.scratch((batch, cin), "float32")
+    b.emit(Op.AVGPOOL_GLOBAL, [t], [x])
+    fw = weight("fc_w", folded["fc_w"])
+    fb = weight("fc_b", folded["fc_b"])
+    t2 = b.scratch((batch, cfg.num_classes), "float32")
+    b.emit(Op.DENSE, [t2], [t, fw, fb])
+    b.tensor("output", (batch, cfg.num_classes), "float32", "output")
+    b.emit(Op.SOFTMAX, ["output"], [t2])
+    b.emit(Op.FENCE)
+    prog = b.build()
+    image = rimfs_mod.pack(files)
+    return prog, image
+
+
+# ---------------------------------------------------------------------------
+# LM service translation (compiled-graph artifacts, paper's ADF ingestion)
+# ---------------------------------------------------------------------------
+
+def compile_lm_service(cfg, batch: int, seq_len: int,
+                       prefill_fn, decode_fn) -> RCBProgram:
+    """Wrap jitted prefill/decode steps ("compiled ADF graph artifacts")
+    into an RCB service program: bind -> dispatch(prefill) -> poll ->
+    dispatch(decode) -> sync."""
+    b = _Builder(f"lm_{cfg.name}")
+    tok_shape = (batch, seq_len) if cfg.input_kind == "tokens" \
+        else (batch, seq_len, cfg.d_model)
+    b.tensor("params", (0,), "float32", "input")       # pytree passthrough
+    b.tensor("tokens", tok_shape, "int32" if cfg.input_kind == "tokens"
+             else cfg.dtype, "input", ("batch", None))
+    b.tensor("cache", (0,), "float32", "scratch")
+    b.tensor("first_logits", (batch, cfg.vocab_size), "float32", "output")
+    b.emit(Op.GRAPH_EXEC, ["first_logits", "cache"], ["params", "tokens"],
+           artifact="prefill")
+    b.emit(Op.POLL, [], ["first_logits"])
+    b.close_block("prefill")
+    b.tensor("next_token", (batch, 1), "int32", "input", ("batch", None))
+    b.tensor("pos", (batch,), "int32", "input", ("batch",))
+    b.tensor("logits", (batch, cfg.vocab_size), "float32", "output")
+    b.emit(Op.GRAPH_EXEC, ["logits", "cache"],
+           ["params", "cache", "next_token", "pos"], artifact="decode")
+    b.emit(Op.POLL, [], ["logits"])
+    b.close_block("decode")
+    return b.build({"prefill": prefill_fn, "decode": decode_fn})

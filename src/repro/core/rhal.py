@@ -1,0 +1,171 @@
+"""Runtime Hardware Abstraction Layer — the ``hal_driver_t`` vtable.
+
+The paper isolates all hardware heterogeneity behind a C struct of function
+pointers covering four primitive families (register ops, DMA, sync, cache
+coherency). The TPU adaptation keeps the strict boundary — the executor only
+ever calls vtable slots — and re-bases the primitives on the XLA execution
+model:
+
+  register ops       -> buffer-table ops (alloc/free/bind_const)
+  initiate/wait DMA  -> host<->device transfers (device_put / device_get)
+  dispatch           -> compute-op dispatch (per-op eager, or traced-fused)
+  poll/fence         -> block_until_ready barriers
+  cache flush/inval  -> buffer donation hints (XLA owns coherency; donation
+                        is the user-visible control point on TPU)
+
+Two drivers ship:
+  * ``EagerDriver``  — dispatches every op as its own device executable with
+    a host sync in between: the OS-mediated analogue (per-op fixed cost,
+    like Vitis AI's ioctl-per-DMA path).
+  * ``TraceDriver``  — records the same calls symbolically so the executor
+    can stage one fused XLA program per RCB program: the baremetal analogue
+    (one dispatch per step, zero host round-trips inside).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import oplib
+from repro.core.rcb import Op
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceConstants:
+    """Roofline constants for the target device (TPU v5e defaults)."""
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12          # FLOP/s per chip
+    hbm_bandwidth: float = 819e9             # B/s per chip
+    ici_link_bandwidth: float = 50e9         # B/s per link
+    hbm_bytes: float = 16e9
+
+
+@dataclasses.dataclass
+class HalDriver:
+    """The vtable. Integrating a new backend == filling these slots."""
+    name: str
+    alloc: Callable[[tuple, str], Any]
+    free: Callable[[Any], None]
+    bind_const: Callable[[Any], Any]
+    initiate_dma: Callable[[Any, str], Any]     # (host_buf, direction) -> buf
+    wait_dma: Callable[[Any], Any]
+    dispatch_compute: Callable[[Op, list, dict], Any]
+    collective: Callable[[str, Any, dict], Any]
+    fence: Callable[[list], None]
+    poll: Callable[[Any], bool]
+    donate: Callable[[Any], Any]
+    constants: DeviceConstants = DeviceConstants()
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    def _count(self, key: str, n: int = 1):
+        self.stats[key] = self.stats.get(key, 0) + n
+
+
+# ---------------------------------------------------------------------------
+# Eager driver (OS-mediated analogue): one device round-trip per primitive.
+# ---------------------------------------------------------------------------
+
+def make_eager_driver(device: Optional[jax.Device] = None) -> HalDriver:
+    device = device or jax.devices()[0]
+
+    def alloc(shape, dtype):
+        d._count("alloc")
+        return jax.device_put(jnp.zeros(shape, jnp.dtype(dtype)), device)
+
+    def free(buf):
+        d._count("free")
+        if hasattr(buf, "delete"):
+            try:
+                buf.delete()
+            except Exception:
+                pass
+
+    def bind_const(value):
+        return jax.device_put(jnp.asarray(value), device)
+
+    def initiate_dma(host_buf, direction):
+        d._count("dma")
+        if direction == "d2h":
+            return np.asarray(host_buf)            # device -> host pull
+        return jax.device_put(jnp.asarray(host_buf), device)
+
+    def wait_dma(buf):
+        d._count("dma_wait")
+        return jax.block_until_ready(buf) if hasattr(buf, "block_until_ready") \
+            else buf
+
+    def dispatch_compute(op, srcs, attrs):
+        d._count("dispatch")
+        out = oplib.compute(op, srcs, attrs)
+        return jax.block_until_ready(out)          # per-op host sync
+
+    def collective(kind, x, attrs):
+        d._count("collective")
+        return x                                    # single-device eager
+
+    def fence(bufs):
+        d._count("fence")
+        for b in bufs:
+            if hasattr(b, "block_until_ready"):
+                b.block_until_ready()
+
+    def poll(buf):
+        d._count("poll")
+        return True
+
+    def donate(buf):
+        return buf
+
+    d = HalDriver("eager_cpu", alloc, free, bind_const, initiate_dma,
+                  wait_dma, dispatch_compute, collective, fence, poll, donate)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Trace driver (baremetal analogue): records ops symbolically for fusion.
+# ---------------------------------------------------------------------------
+
+def make_trace_driver() -> HalDriver:
+    """Dispatch slots operate on tracers; no device sync anywhere. The
+    executor stages the whole RCB program through this driver inside one
+    ``jax.jit``, yielding a single fused executable."""
+
+    def alloc(shape, dtype):
+        return jnp.zeros(shape, jnp.dtype(dtype))
+
+    def free(buf):
+        return None
+
+    def bind_const(value):
+        return jnp.asarray(value)
+
+    def initiate_dma(host_buf, direction):
+        return jnp.asarray(host_buf)
+
+    def wait_dma(buf):
+        return buf                                  # no sync under trace
+
+    def dispatch_compute(op, srcs, attrs):
+        d._count("dispatch")
+        return oplib.compute(op, srcs, attrs)       # stays symbolic
+
+    def collective(kind, x, attrs):
+        return x
+
+    def fence(bufs):
+        return None
+
+    def poll(buf):
+        return True
+
+    def donate(buf):
+        return buf
+
+    d = HalDriver("trace_xla", alloc, free, bind_const, initiate_dma,
+                  wait_dma, dispatch_compute, collective, fence, poll, donate)
+    return d

@@ -1,0 +1,214 @@
+"""Runtime Platform Management — the system executive.
+
+In the paper RTPM replaces the OS for three concerns: interconnect/cache
+coherency, asynchronous event handling (a unified ISR dispatcher), and host
+connectivity/telemetry over a CRC-32-framed lwIP stack. At pod scale the
+same role is the *cluster control plane*; this module provides:
+
+  * ``EventDispatcher`` — the unified ISR analogue: typed events
+    (completion, error, heartbeat, preemption) fan out to registered
+    handlers from a single queue.
+  * ``Telemetry``       — per-step latency ring buffer; mean / percentile /
+    CV (the paper's headline determinism metric).
+  * ``HeartbeatMonitor``— worker liveness with an injectable clock; a
+    deadline policy yields failure + straggler verdicts (the 1000-node
+    fault-tolerance hook; tests drive it with a fake clock).
+  * ``Platform``        — glue: provisioning (mount RIMFS image + decode
+    RCB program from bytes — the network payloads), time-to-service
+    measurement, checkpoint/restart + elastic re-binding orchestration.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Optional
+
+from repro.core import rbl as rbl_mod
+from repro.core import rimfs as rimfs_mod
+from repro.core.rcb import RCBProgram
+
+
+# ---------------------------------------------------------------------------
+# Events (unified ISR dispatcher)
+# ---------------------------------------------------------------------------
+
+class EventDispatcher:
+    def __init__(self):
+        self._handlers: dict[str, list[Callable]] = collections.defaultdict(list)
+        self._queue: collections.deque = collections.deque()
+        self.dropped = 0
+
+    def register(self, kind: str, handler: Callable[[dict], None]) -> None:
+        self._handlers[kind].append(handler)
+
+    def post(self, kind: str, payload: Optional[dict] = None) -> None:
+        self._queue.append((kind, payload or {}))
+
+    def process(self, max_events: Optional[int] = None) -> int:
+        n = 0
+        while self._queue and (max_events is None or n < max_events):
+            kind, payload = self._queue.popleft()
+            handlers = self._handlers.get(kind)
+            if not handlers:
+                self.dropped += 1
+            else:
+                for h in handlers:
+                    h(payload)
+            n += 1
+        return n
+
+
+# ---------------------------------------------------------------------------
+# Telemetry
+# ---------------------------------------------------------------------------
+
+class Telemetry:
+    def __init__(self, capacity: int = 65536):
+        self._lat: collections.deque = collections.deque(maxlen=capacity)
+        self._metrics: collections.deque = collections.deque(maxlen=capacity)
+
+    def record_latency(self, seconds: float) -> None:
+        self._lat.append(seconds)
+
+    def record(self, **metrics) -> None:
+        self._metrics.append(dict(metrics, t=time.time()))
+
+    def summary(self, warmup: int = 0) -> dict:
+        xs = list(self._lat)[warmup:]
+        if len(xs) < 2:
+            return {"n": len(xs)}
+        xs_sorted = sorted(xs)
+        mu = statistics.fmean(xs)
+        sd = statistics.stdev(xs)
+        q = lambda p: xs_sorted[min(len(xs) - 1, int(p * len(xs)))]
+        return {
+            "n": len(xs), "mean": mu, "std": sd,
+            "cv_percent": 100.0 * sd / mu if mu else float("inf"),
+            "p50": q(0.50), "p95": q(0.95), "p99": q(0.99),
+            "min": xs_sorted[0], "max": xs_sorted[-1],
+        }
+
+
+# ---------------------------------------------------------------------------
+# Heartbeats / failure & straggler detection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class WorkerState:
+    last_beat: float
+    step: int = 0
+    alive: bool = True
+
+
+class HeartbeatMonitor:
+    """Deadline-policy liveness. ``clock`` injectable for determinism."""
+
+    def __init__(self, deadline: float = 10.0, straggler_factor: float = 3.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.deadline = deadline
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        self.workers: dict[str, WorkerState] = {}
+
+    def beat(self, worker: str, step: int = 0) -> None:
+        now = self.clock()
+        w = self.workers.get(worker)
+        if w is None:
+            self.workers[worker] = WorkerState(now, step)
+        else:
+            w.last_beat, w.step, w.alive = now, step, True
+
+    def check(self) -> dict:
+        """Returns {"failed": [...], "stragglers": [...]}."""
+        now = self.clock()
+        failed, stragglers = [], []
+        steps = [w.step for w in self.workers.values() if w.alive]
+        median_step = sorted(steps)[len(steps) // 2] if steps else 0
+        for name, w in self.workers.items():
+            if not w.alive:
+                continue
+            age = now - w.last_beat
+            if age > self.deadline:
+                w.alive = False
+                failed.append(name)
+            elif age > self.deadline / self.straggler_factor or \
+                    w.step + 2 < median_step:
+                stragglers.append(name)
+        return {"failed": failed, "stragglers": stragglers,
+                "median_step": median_step}
+
+
+# ---------------------------------------------------------------------------
+# Platform
+# ---------------------------------------------------------------------------
+
+class Platform:
+    """The executive: provisioning, service readiness, elasticity."""
+
+    def __init__(self, deadline: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self._boot_t0 = time.perf_counter()
+        self.events = EventDispatcher()
+        self.telemetry = Telemetry()
+        self.heartbeats = HeartbeatMonitor(deadline=deadline, clock=clock)
+        self.rimfs: Optional[rimfs_mod.RIMFS] = None
+        self.program: Optional[RCBProgram] = None
+        self._ready_at: Optional[float] = None
+        self.events.register("rcb_complete",
+                             lambda p: self.telemetry.record(**p))
+
+    # ------------------------------------------------------------ provision
+    def provision(self, image: Optional[bytes] = None,
+                  program_bytes: Optional[bytes] = None,
+                  program: Optional[RCBProgram] = None,
+                  verify: bool = True) -> None:
+        """Paper phase 1: load model binary (RCBs + weights) into RIMFS."""
+        if image is not None:
+            self.rimfs = rimfs_mod.mount(image)
+            if verify:
+                self.rimfs.verify_image()
+        if program_bytes is not None:
+            program = RCBProgram.decode(program_bytes)
+        if program is not None:
+            self.program = program
+        self._ready_at = time.perf_counter()
+        self.events.post("provisioned",
+                         {"files": self.rimfs.files() if self.rimfs else []})
+
+    def bind(self, inputs: Optional[dict] = None, driver=None,
+             artifacts: Optional[dict] = None) -> rbl_mod.BoundProgram:
+        """Paper phase 2: symbolic -> physical resolution."""
+        assert self.program is not None, "provision() first"
+        if artifacts:
+            self.program.artifacts.update(artifacts)
+        return rbl_mod.bind(self.program, rimfs=self.rimfs, inputs=inputs,
+                            driver=driver)
+
+    # ------------------------------------------------------------ readiness
+    def time_to_service(self) -> float:
+        """Boot -> network-ready (paper Table 2's 350-745x metric)."""
+        assert self._ready_at is not None
+        return self._ready_at - self._boot_t0
+
+    def post(self, kind: str, payload: Optional[dict] = None) -> None:
+        self.events.post(kind, payload)
+        self.events.process()
+
+    # ------------------------------------------------------------ elasticity
+    def handle_failures(self, bound: rbl_mod.BoundProgram,
+                        on_shrink: Optional[Callable] = None) -> dict:
+        """Failure/straggler sweep; re-binds the program when workers die.
+
+        Control-as-data makes elasticity a pure re-binding: the RCB stream is
+        untouched, only physical resources change (paper §5.2 implication).
+        """
+        verdict = self.heartbeats.check()
+        if verdict["failed"]:
+            self.events.post("worker_failed", {"workers": verdict["failed"]})
+            self.events.process()
+            if on_shrink is not None:
+                on_shrink(verdict["failed"])
+            rbl_mod.rebind(bound)
+        return verdict

@@ -1,0 +1,104 @@
+"""Blocked causal (GQA) flash attention — Pallas TPU kernel.
+
+TPU adaptation of the paper's "software choreographs data movement into
+local memory" principle: BlockSpecs stage (block_q x d) query tiles and
+(block_k x d) KV tiles HBM->VMEM; the online-softmax running state
+(m, l, acc) lives in VMEM scratch and persists across the sequential
+trailing grid dimension (the KV walk), so scores never round-trip to HBM.
+MXU alignment: block sizes are multiples of 128 on the matmul dims (the
+wrapper pads smaller head_dims).
+
+Grid: (batch*kv_heads*group, n_q_blocks, n_kv_blocks)   [last dim sequential]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, block_q: int, block_k: int,
+            n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                       s.shape, 0)
+        kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                       s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + \
+        jax.lax.dot(p.astype(v.dtype), v,
+                    preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)               # fully-masked rows
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         group: int = 1, causal: bool = True,
+                         scale: float | None = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: (BHG, S, D); k/v: (BH, S, D) with BHG == BH*group."""
+    bhg, s, d = q.shape
+    bh, sk, _ = k.shape
+    assert bhg == bh * group, (q.shape, k.shape, group)
+    scale = scale if scale is not None else 1.0 / d ** 0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, sk)
+    n_q = pl.cdiv(s, block_q)
+    n_k = pl.cdiv(sk, block_k)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(bhg, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, qi, ki, g=group: (b // g, ki, 0)),
+            pl.BlockSpec((1, block_k, d),
+                         lambda b, qi, ki, g=group: (b // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bhg, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

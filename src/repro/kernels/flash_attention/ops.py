@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the flash-attention kernel.
+
+Handles layout (B,S,H,D) <-> kernel layout, GQA head grouping, head_dim
+padding to the 128-lane MXU width, and interpret-mode fallback on CPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,S,Hkv,D); returns (B,S,H,D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    _, sk, hkv, _ = k.shape
+    g = h // hkv
+    dp = max(d, 128) if not interpret else d      # MXU lane alignment
+    if dp != d:
+        pad = [(0, 0)] * 3 + [(0, dp - d)]
+        q, k, v = (jnp.pad(a, pad) for a in (q, k, v))
+    qk = q.transpose(0, 2, 1, 3).reshape(b * h, s, dp)
+    kk = k.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dp)
+    vk = v.transpose(0, 2, 1, 3).reshape(b * hkv, sk, dp)
+    o = flash_attention_bhsd(qk, kk, vk, group=g, causal=causal,
+                             scale=1.0 / d ** 0.5, block_q=block_q,
+                             block_k=block_k, interpret=interpret)
+    o = o.reshape(b, h, s, dp).transpose(0, 2, 1, 3)
+    return o[..., :d]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  group: int = 1, causal: bool = True,
+                  scale: float | None = None) -> jax.Array:
+    """q: (BHG, S, D); k/v: (BH, S, D)."""
+    bhg, s, d = q.shape
+    bh, sk, _ = k.shape
+    scale = scale if scale is not None else 1.0 / d ** 0.5
+    qg = q.reshape(bh, group, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bgqd,bkd->bgqk", qg, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, sk), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bgqk,bkd->bgqd", p, vf)
+    return o.reshape(bhg, s, d).astype(q.dtype)

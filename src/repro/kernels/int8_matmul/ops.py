@@ -1,0 +1,21 @@
+"""Jitted wrapper for the INT8 GEMM kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul.kernel import int8_matmul_mkn
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def int8_matmul(x, w, scale, *, block_m: int = 128, block_n: int = 128,
+                block_k: int = 128, out_dtype=jnp.float32,
+                interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return int8_matmul_mkn(x, w, scale, block_m=block_m, block_n=block_n,
+                           block_k=block_k, out_dtype=out_dtype,
+                           interpret=interpret)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the INT8 GEMM."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(x, w, scale, out_dtype=jnp.float32):
+    acc = jax.lax.dot(x, w, preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * scale[None, :]).astype(out_dtype)

@@ -1,0 +1,21 @@
+"""Naive per-token selective-scan oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(da, bx, c):
+    """da/bx: (B,T,di,N) (da = log decay); c: (B,T,N) -> y (B,T,di)."""
+    def body(h, inp):
+        da_, bx_, c_ = inp
+        h = jnp.exp(da_) * h + bx_
+        return h, jnp.einsum("bdn,bn->bd", h, c_)
+
+    b, t, di, n = da.shape
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    inputs = (da.astype(jnp.float32).swapaxes(0, 1),
+              bx.astype(jnp.float32).swapaxes(0, 1),
+              c.astype(jnp.float32).swapaxes(0, 1))
+    _, ys = jax.lax.scan(body, h0, inputs)
+    return ys.swapaxes(0, 1).astype(da.dtype)

@@ -1,0 +1,26 @@
+"""Jitted public wrapper for the WKV6 kernel: (B,T,H,K) layout + fallback."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.wkv6.kernel import wkv6_bhtk
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, lw, u, *, chunk: int = 64,
+         interpret: bool | None = None) -> jax.Array:
+    """r/k/v/lw: (B,T,H,K); u: (H,K). Returns y (B,T,H,K)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, t, h, kk = r.shape
+
+    def fold(a):
+        return a.transpose(0, 2, 1, 3).reshape(b * h, t, kk)
+
+    u_full = jnp.broadcast_to(u[None], (b, h, kk)).reshape(b * h, kk)
+    y = wkv6_bhtk(fold(r), fold(k), fold(v), fold(lw), u_full,
+                  chunk=chunk, interpret=interpret)
+    return y.reshape(b, h, t, kk).transpose(0, 2, 1, 3)

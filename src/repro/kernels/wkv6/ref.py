@@ -1,0 +1,29 @@
+"""Naive per-token WKV6 recurrence — the true oracle (O(T*K*K) state walk).
+
+  y_t = r_t . (S_{t-1} + (u * k_t) v_t^T)
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T        with w_t = exp(lw_t)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, lw, u):
+    """r/k/v/lw: (BH, T, K) fp32; u: (BH, K). Returns (BH, T, K)."""
+    bh, t, kk = r.shape
+    w = jnp.exp(lw.astype(jnp.float32))
+
+    def body(s, inp):
+        r_, k_, v_, w_ = inp                       # (BH, K)
+        kv = k_[:, :, None] * v_[:, None, :]       # (BH, K, K)
+        y = jnp.einsum("bi,bio->bo", r_,
+                       s + u[:, :, None] * kv)
+        s = w_[:, :, None] * s + kv
+        return s, y
+
+    s0 = jnp.zeros((bh, kk, kk), jnp.float32)
+    inputs = tuple(a.astype(jnp.float32).swapaxes(0, 1)
+                   for a in (r, k, v, w))
+    _, ys = jax.lax.scan(body, s0, inputs)
+    return ys.swapaxes(0, 1).astype(r.dtype)

@@ -1,0 +1,58 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from artifacts.
+
+  PYTHONPATH=src python -m repro.launch.report
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+from repro.launch.roofline import RESULTS, analyze, load, markdown_table
+
+REPO = pathlib.Path(__file__).resolve().parents[3]
+EXP = REPO / "EXPERIMENTS.md"
+
+
+def dryrun_table() -> str:
+    hdr = ("| arch | shape | mesh | compile s | flops/dev | bytes/dev | "
+           "coll/dev | temp GB | args GB |\n" + "|---|" * 9 + "\n")
+    rows = []
+    for mesh in ("pod256", "pod512"):
+        for p in sorted((RESULTS / "dryrun" / mesh).glob("*.json")):
+            if "__full" in p.name or "__train_zero1" in p.name:
+                continue
+            r = json.loads(p.read_text())
+            if r.get("skipped"):
+                rows.append(f"| {r['arch']} | {r['shape']} | {mesh} | — | — "
+                            f"| — | — | — | SKIP ({r['reason']}) |")
+                continue
+            m = r["memory"]
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {mesh} | "
+                f"{r['compile_seconds']:.0f} | {r['flops_per_device']:.2e} | "
+                f"{r['bytes_per_device']:.2e} | "
+                f"{r['collective_bytes_per_device']:.2e} | "
+                f"{m['temp_bytes']/1e9:.2f} | "
+                f"{m['argument_bytes']/1e9:.2f} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main() -> None:
+    text = EXP.read_text()
+    roof = markdown_table(load("pod256", include_skips=True))
+    dry = dryrun_table()
+    text = re.sub(r"<!-- ROOFLINE_TABLE -->",
+                  "<!-- ROOFLINE_TABLE -->\n\n" + roof, text, count=1) \
+        if "| arch | shape | compute s" not in text else text
+    text = re.sub(r"<!-- DRYRUN_TABLE -->",
+                  "<!-- DRYRUN_TABLE -->\n\n" + dry, text, count=1) \
+        if "| arch | shape | mesh |" not in text else text
+    EXP.write_text(text)
+    print("EXPERIMENTS.md updated "
+          f"({len(roof.splitlines())} roofline rows, "
+          f"{len(dry.splitlines())} dry-run rows)")
+
+
+if __name__ == "__main__":
+    main()

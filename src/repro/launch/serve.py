@@ -1,0 +1,91 @@
+"""Serving driver: network-attached inference service (the paper's mode).
+
+Starts the CRC-framed socket server, provisions the ResNet-18 case study
+(or an LM engine with --lm), fires batched client requests at it, and
+reports the latency CV telemetry.
+
+  PYTHONPATH=src python -m repro.launch.serve --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --lm --requests 8
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.resnet18 import CONFIG as RESNET
+from repro.core import rctc
+from repro.models import resnet as rn
+from repro.models import transformer as tf
+from repro.models.common import init_params
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.server import Client, InferenceServer
+
+
+def serve_resnet(requests: int, batch: int) -> None:
+    cfg = RESNET.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params),
+                                        batch=batch)
+    server = InferenceServer()
+    addr = server.start()
+    print(f"[serve] listening on {addr}")
+    try:
+        client = Client(addr)
+        print("[serve] provision:", client.provision(image, prog.encode()))
+        rng = np.random.RandomState(0)
+        t0 = time.perf_counter()
+        for _ in range(requests):
+            x = rng.rand(batch, cfg.image_size, cfg.image_size, 3) \
+                .astype(np.float32)
+            out = client.infer(input=x)
+        dt = time.perf_counter() - t0
+        tel = client.telemetry()
+        print(f"[serve] {requests} requests x batch {batch}: "
+              f"{requests*batch/dt:.1f} img/s; "
+              f"CV={tel.get('cv_percent', 0):.2f}% "
+              f"p99={tel.get('p99', 0)*1e3:.2f}ms")
+        client.close()
+    finally:
+        server.stop()
+
+
+def serve_lm(requests: int) -> None:
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab_size, (16,))
+                    .astype(np.int32), max_new=8)
+            for i in range(requests)]
+    t0 = time.perf_counter()
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_drained()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    s = eng.telemetry.summary(warmup=2)
+    print(f"[serve-lm] {requests} prompts, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s); decode-step "
+          f"CV={s.get('cv_percent', 0):.2f}%")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lm", action="store_true")
+    args = ap.parse_args()
+    if args.lm:
+        serve_lm(args.requests)
+    else:
+        serve_resnet(args.requests, args.batch)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Step builders + ``input_specs`` stand-ins for every (arch x shape) cell.
+
+``input_specs`` follows the dry-run contract: ShapeDtypeStruct stand-ins for
+every model input — weak-type-correct, shardable (NamedShardings resolved by
+the RBL logical-axis rules when a binding context is active), zero device
+allocation. ``train_step`` is lowered for train shapes; ``prefill_step`` /
+``decode_step`` (the ``serve_step``s) for inference shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import sharding_for
+from repro.models import transformer as tf
+from repro.models.common import (ParamSpec, init_params, shape_structs,
+                                 softmax_cross_entropy)
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init_specs, \
+    adamw_update
+from repro.optim.schedules import cosine_warmup
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, axes):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype),
+                                sharding=sharding_for(shape, axes))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the data inputs of one cell."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.input_kind == "tokens":
+            toks = _sds((B, S), "int32", ("batch", None))
+        else:   # vlm/audio: precomputed patch/frame embeddings (stub frontend)
+            toks = _sds((B, S, cfg.d_model), cfg.dtype, ("batch", None, "embed"))
+        return {"inputs": toks, "targets": _sds((B, S), "int32", ("batch", None))}
+    if shape.kind == "prefill":
+        if cfg.input_kind == "tokens":
+            toks = _sds((B, S), "int32", ("batch", None))
+        else:
+            toks = _sds((B, S, cfg.d_model), cfg.dtype, ("batch", None, "embed"))
+        return {"inputs": toks}
+    # decode: one new token against a seq_len-deep cache
+    if cfg.input_kind == "tokens":
+        toks = _sds((B, 1), "int32", ("batch", None))
+    else:
+        toks = _sds((B, 1, cfg.d_model), cfg.dtype, ("batch", None, "embed"))
+    return {"inputs": toks, "pos": _sds((B,), "int32", ("batch",))}
+
+
+def param_structs(cfg: ModelConfig):
+    return shape_structs(tf.model_specs(cfg))
+
+
+def opt_structs(cfg: ModelConfig):
+    return shape_structs(adamw_init_specs(tf.model_specs(cfg)))
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeConfig):
+    return shape_structs(tf.cache_specs(cfg, shape.global_batch,
+                                        shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_loss_fn(cfg: ModelConfig, unroll: bool, remat: bool,
+                 remat_policy: str = "full"):
+    def loss_fn(params, batch):
+        logits, _, aux = tf.forward_full(cfg, params, batch["inputs"],
+                                         want_cache=False, unroll=unroll,
+                                         remat=remat,
+                                         remat_policy=remat_policy)
+        loss = softmax_cross_entropy(logits, batch["targets"])
+        return loss + tf.AUX_LOSS_WEIGHT * aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamWConfig = AdamWConfig(),
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, unroll: bool = False,
+                    remat: bool = True, remat_policy: str = None):
+    import os
+    remat_policy = remat_policy or os.environ.get("AEG_REMAT_POLICY", "full")
+    loss_fn = make_loss_fn(cfg, unroll, remat, remat_policy)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        lr = cosine_warmup(opt_state.step, peak_lr, warmup, total_steps)
+        params, opt_state, gm = adamw_update(opt, grads, opt_state, params, lr)
+        metrics = {"loss": loss, "aux_loss": aux, "total_loss": total,
+                   "lr": lr, **gm}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    def prefill_step(params, batch):
+        logits, cache, _ = tf.forward_full(cfg, params, batch["inputs"],
+                                           want_cache=True, unroll=unroll)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False):
+    def decode_step(params, cache, batch):
+        pos = batch.get("pos")
+        if pos is None:
+            pos = jnp.zeros((batch["inputs"].shape[0],), jnp.int32)
+        logits, cache = tf.forward_decode(cfg, params, batch["inputs"], pos,
+                                          cache, unroll=unroll)
+        return logits[:, 0], cache
+    return decode_step
+
+
+def step_for(cfg: ModelConfig, shape: ShapeConfig, unroll: bool):
+    """(callable, example-args builder) for one dry-run cell."""
+    if shape.kind == "train":
+        fn = make_train_step(cfg, unroll=unroll)
+        args = (param_structs(cfg), opt_structs(cfg), input_specs(cfg, shape))
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(cfg, unroll=unroll)
+        args = (param_structs(cfg), input_specs(cfg, shape))
+        donate = ()
+    else:
+        fn = make_decode_step(cfg, unroll=unroll)
+        args = (param_structs(cfg), cache_structs(cfg, shape),
+                input_specs(cfg, shape))
+        donate = (1,)
+    return fn, args, donate

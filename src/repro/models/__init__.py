@@ -1,0 +1,1 @@
+from repro.models.common import ParamSpec, init_params, shape_structs, param_shardings  # noqa: F401

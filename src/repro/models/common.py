@@ -1,0 +1,149 @@
+"""Shared model machinery: ParamSpec trees, norms, RoPE, initialization.
+
+Every model exposes ``param_specs(cfg) -> pytree[ParamSpec]`` — a single
+source of truth from which we derive (a) materialized params for smoke
+tests/training, (b) ``ShapeDtypeStruct`` stand-ins for the multi-pod dry-run
+(no allocation), and (c) ``NamedSharding``s via the RBL logical-axis
+resolver. This mirrors the paper's RCTC "mapping generation" step: descriptors
+that map logical tensor IDs to physical requirements, resolved at bind time.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import sharding_for
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    dtype: str
+    axes: tuple               # logical axis names (len == ndim), None entries ok
+    init: str = "normal"      # normal | zeros | ones | embed | decay | uniform
+    scale: float = 1.0
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_tree_map(fn, specs):
+    return jax.tree.map(fn, specs, is_leaf=is_spec)
+
+
+def shape_structs(specs, sharded: bool = True):
+    """ShapeDtypeStruct tree (with shardings when a binding ctx is active)."""
+    def mk(s: ParamSpec):
+        sh = sharding_for(s.shape, s.axes) if sharded else None
+        return jax.ShapeDtypeStruct(s.shape, s.jdtype, sharding=sh)
+    return spec_tree_map(mk, specs)
+
+
+def param_shardings(specs):
+    return spec_tree_map(lambda s: sharding_for(s.shape, s.axes), specs)
+
+
+def init_params(rng: jax.Array, specs):
+    """Materialize parameters from specs (deterministic per-leaf fold-in)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    out = []
+    for i, s in enumerate(leaves):
+        key = jax.random.fold_in(rng, i)
+        if s.init == "zeros":
+            v = jnp.zeros(s.shape, s.jdtype)
+        elif s.init == "ones":
+            v = jnp.ones(s.shape, s.jdtype)
+        elif s.init == "uniform":
+            v = jax.random.uniform(key, s.shape, jnp.float32, -1.0, 1.0)
+            v = (v * s.scale).astype(s.jdtype)
+        elif s.init == "decay":       # rwkv decay base: spread in [-6, -1]
+            u = jax.random.uniform(key, s.shape, jnp.float32)
+            v = (-6.0 + 5.0 * u).astype(s.jdtype)
+        elif s.init == "embed":
+            # 1/sqrt(d) std: keeps tied-embedding logits at O(1) scale
+            std = s.shape[-1] ** -0.5
+            v = (jax.random.normal(key, s.shape, jnp.float32)
+                 * std).astype(s.jdtype)
+        else:                          # truncated-normal fan-in
+            fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+            std = s.scale / math.sqrt(max(1, fan_in))
+            v = (jax.random.truncated_normal(key, -3, 3, s.shape, jnp.float32)
+                 * std).astype(s.jdtype)
+        out.append(v)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize for s in leaves)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def group_norm(x: jax.Array, w: jax.Array, b: jax.Array, groups: int,
+               eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the trailing dim (rwkv6 ln_x)."""
+    dt = x.dtype
+    *lead, d = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, groups, d // groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(*lead, d)
+    return (x * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    dt = x.dtype
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # (d/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., seq, d/2)
+    cos = jnp.cos(ang)[..., None, :]                  # (..., seq, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL; stable in fp32; logits may be vocab-sharded."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,32 @@
+"""Modality frontend STUBS for the [vlm]/[audio] backbone architectures.
+
+Per assignment, pixtral-12b and musicgen-medium specify the transformer
+BACKBONE only; the modality frontend supplies precomputed embeddings via
+``input_specs()``. These helpers generate deterministic stand-ins with the
+right shapes/statistics so examples and tests can exercise the backbones
+end-to-end without a ViT/EnCodec implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def patch_embed_stub(cfg: ModelConfig, batch: int, seq: int,
+                     seed: int = 0) -> np.ndarray:
+    """Pixtral: stand-in for ViT patch embeddings, unit-RMS like a real
+    post-LN patch encoder output."""
+    rng = np.random.RandomState(seed)
+    x = rng.randn(batch, seq, cfg.d_model).astype(np.float32)
+    return x / np.sqrt((x ** 2).mean(-1, keepdims=True) + 1e-6)
+
+
+def frame_embed_stub(cfg: ModelConfig, batch: int, seq: int,
+                     seed: int = 0, codebooks: int = 4) -> np.ndarray:
+    """MusicGen: stand-in for summed EnCodec codebook embeddings (the
+    backbone sees the SUM of per-codebook embeddings per frame)."""
+    rng = np.random.RandomState(seed)
+    parts = [rng.randn(batch, seq, cfg.d_model).astype(np.float32)
+             * (0.5 ** i) for i in range(codebooks)]
+    return np.sum(parts, axis=0) / codebooks

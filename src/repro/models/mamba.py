@@ -1,0 +1,122 @@
+"""Selective SSM (Mamba-style) branch for the Hymba hybrid architecture.
+
+Full-sequence processing scans over fixed-size chunks; inside a chunk the
+linear recurrence ``h_t = a_t * h_{t-1} + b_t`` runs as a log-depth
+``associative_scan`` (small, statically-unrolled HLO). Decode is a single
+state update. The Pallas ``ssm_scan`` kernel implements the same chunked
+recurrence with VMEM tiling (kernels/ssm_scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.common import ParamSpec
+
+DT_RANK = 32
+
+
+def mamba_specs(cfg: ModelConfig) -> dict:
+    L, d = cfg.num_layers, cfg.d_model
+    di, N = cfg.d_model, cfg.ssm_state          # d_inner == d_model (Hymba)
+    dt = cfg.dtype
+    return {
+        "m_in": ParamSpec((L, d, 2 * di), dt, ("layers", "fsdp", "mlp")),
+        "m_x": ParamSpec((L, di, DT_RANK + 2 * N), dt, ("layers", "fsdp", None)),
+        "m_dt": ParamSpec((L, DT_RANK, di), dt, ("layers", None, "fsdp")),
+        "m_dt_b": ParamSpec((L, di), "float32", ("layers", None), "zeros"),
+        "m_alog": ParamSpec((L, di, N), "float32",
+                            ("layers", "fsdp", "state"), "uniform", 1.0),
+        "m_d": ParamSpec((L, di), "float32", ("layers", None), "ones"),
+        "m_out": ParamSpec((L, di, d), dt, ("layers", "mlp", "fsdp")),
+    }
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    L, di, N = cfg.num_layers, cfg.d_model, cfg.ssm_state
+    return {"ssm": ParamSpec((L, batch, di, N), "float32",
+                             ("layers", "batch", "mlp", "state"), "zeros")}
+
+
+def _ssm_inputs(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Project x -> (u, z, dt, B, C). u/z (B,T,di); dt (B,T,di) fp32;
+    B/C (B,T,N) fp32."""
+    N = cfg.ssm_state
+    uz = jnp.einsum("btd,de->bte", x, p["m_in"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    proj = jnp.einsum("btd,de->bte", u, p["m_x"]).astype(jnp.float32)
+    dtr, B_, C_ = jnp.split(proj, [DT_RANK, DT_RANK + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,rd->btd", dtr, p["m_dt"].astype(jnp.float32))
+        + p["m_dt_b"])
+    return u, z, dt, B_, C_
+
+
+def ssm_chunked(u, dt, B_, C_, A, D, h0, chunk: int = 64):
+    """Chunked selective scan.
+
+    u (B,T,di) fp32, dt (B,T,di), B_/C_ (B,T,N), A (di,N) negative,
+    D (di,), h0 (B,di,N). Returns (y (B,T,di), h_final).
+    """
+    Bb, T, di = u.shape
+    N = B_.shape[-1]
+    C = min(chunk, T)
+    Tp = (T + C - 1) // C * C
+
+    da_log = dt[..., None] * A[None, None]            # (B,T,di,N)  <= 0
+    binp = (dt * u)[..., None] * B_[:, :, None, :]    # (B,T,di,N)
+    if Tp != T:
+        # identity padding: da=0 keeps h, binp=0 adds nothing
+        da_log = jnp.pad(da_log, [(0, 0), (0, Tp - T), (0, 0), (0, 0)])
+        binp = jnp.pad(binp, [(0, 0), (0, Tp - T), (0, 0), (0, 0)])
+        C_ = jnp.pad(C_, [(0, 0), (0, Tp - T), (0, 0)])
+    NC = Tp // C
+
+    def resh(a):
+        return a.reshape(Bb, NC, C, *a.shape[2:]).swapaxes(0, 1)
+
+    da_c, b_c, c_c = resh(da_log), resh(binp), resh(C_)
+
+    def assoc(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def body(h, inp):
+        da_, b_, cc_ = inp                             # (B,C,di,N),(B,C,N)
+        a_ = jnp.exp(da_)
+        # within-chunk recurrence, seeded by the carried state
+        b_ = b_.at[:, 0].add(a_[:, 0] * h)
+        acc_a, acc_b = jax.lax.associative_scan(assoc, (a_, b_), axis=1)
+        y = jnp.einsum("btdn,btn->btd", acc_b, cc_)
+        return acc_b[:, -1], y
+
+    h_final, ys = jax.lax.scan(body, h0, (da_c, b_c, c_c))
+    y = ys.swapaxes(0, 1).reshape(Bb, Tp, di)[:, :T]
+    return y + u * D[None, None], h_final
+
+
+def mamba_mix(cfg: ModelConfig, p: dict, x: jax.Array, h0: jax.Array):
+    """Full-sequence Mamba branch. Returns (y, h_final)."""
+    u, z, dt, B_, C_ = _ssm_inputs(cfg, p, x)
+    A = -jnp.exp(p["m_alog"])
+    y, h1 = ssm_chunked(u.astype(jnp.float32), dt, B_, C_, A, p["m_d"], h0)
+    y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = shard(y, "batch", "seq", "mlp")
+    return jnp.einsum("btd,de->bte", y, p["m_out"]), h1
+
+
+def mamba_step(cfg: ModelConfig, p: dict, x: jax.Array, h0: jax.Array):
+    """Single-token decode. x (B,1,d); h0 (B,di,N)."""
+    u, z, dt, B_, C_ = _ssm_inputs(cfg, p, x)
+    A = -jnp.exp(p["m_alog"])
+    da = jnp.exp(dt[:, 0, :, None] * A[None])               # (B,di,N)
+    h1 = da * h0 + (dt[:, 0] * u[:, 0].astype(jnp.float32))[..., None] \
+        * B_[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", h1, C_[:, 0]) + u[:, 0].astype(jnp.float32) \
+        * p["m_d"]
+    y = y[:, None].astype(x.dtype) * \
+        jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("btd,de->bte", y, p["m_out"]), h1

@@ -1,0 +1,119 @@
+"""Dense SwiGLU MLP and capacity-based top-k MoE (expert-parallel).
+
+The MoE dispatch uses the Mesh-TensorFlow/Switch formulation: tokens are
+grouped, a (group, token, expert, capacity) dispatch tensor routes tokens to
+per-expert slots, and experts run as one batched einsum with the expert dim
+sharded over the ``model`` mesh axis (EP). Under pjit the dispatch/combine
+einsums lower to the expert all-to-all. Arctic's dense-residual branch is a
+parallel SwiGLU added to the routed output.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.common import ParamSpec
+
+
+# ---------------------------------------------------------------------------
+# Dense SwiGLU
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None,
+              prefix: str = "mlp_") -> dict:
+    L, d = cfg.num_layers, cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.dtype
+    return {
+        prefix + "wi_gate": ParamSpec((L, d, f), dt, ("layers", "fsdp", "mlp")),
+        prefix + "wi_up": ParamSpec((L, d, f), dt, ("layers", "fsdp", "mlp")),
+        prefix + "wo": ParamSpec((L, f, d), dt, ("layers", "mlp", "fsdp")),
+    }
+
+
+def swiglu(p: dict, x: jax.Array, prefix: str = "mlp_") -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p[prefix + "wi_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, p[prefix + "wi_up"])
+    h = shard(jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u,
+              "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p[prefix + "wo"])
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    L, d, f, E = cfg.num_layers, cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.dtype
+    p = {
+        "router": ParamSpec((L, d, E), "float32", ("layers", None, "experts")),
+        "we_gate": ParamSpec((L, E, d, f), dt, ("layers", "experts", "fsdp", "mlp")),
+        "we_up": ParamSpec((L, E, d, f), dt, ("layers", "experts", "fsdp", "mlp")),
+        "we_out": ParamSpec((L, E, f, d), dt, ("layers", "experts", "mlp", "fsdp")),
+    }
+    if cfg.moe_dense_residual:
+        p.update(mlp_specs(cfg, cfg.d_ff_dense, prefix="dense_"))
+    return p
+
+
+def _group(x: jax.Array, group_size: int):
+    B, S, d = x.shape
+    g = min(group_size, S)
+    return x.reshape(B * (S // g), g, d)
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array,
+            group_size: int = 1024) -> tuple[jax.Array, jax.Array]:
+    """Top-k capacity-dropped MoE. Returns (output, aux_load_balance_loss)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.experts_per_token
+    xg = _group(x, group_size)                     # (G, T, d)
+    G, T, _ = xg.shape
+    cap = max(K, int(math.ceil(T * K * cfg.moe_capacity_factor / E)))
+    xg = shard(xg, "batch", None, None)
+
+    # router in bf16 with fp32 accumulation: an fp32 .astype copy of the
+    # whole token stream costs a (G,T,d) fp32 all-gather per layer under TP
+    # (§Perf H5); MXU-style mixed precision keeps logits fp32-exact enough.
+    logits = jnp.einsum("gtd,de->gte", xg, p["router"].astype(xg.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)        # (G, T, E)
+    gate, eidx = jax.lax.top_k(probs, K)           # (G, T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e fraction_e * mean_prob_e.
+    fraction = jnp.mean(jax.nn.one_hot(eidx, E, dtype=jnp.float32), axis=(1, 2))
+    aux = E * jnp.mean(jnp.sum(fraction * jnp.mean(probs, axis=1), axis=-1))
+
+    # Position of each (token, slot) within its expert's capacity buffer.
+    onehot_e = jax.nn.one_hot(eidx, E, dtype=jnp.float32)       # (G,T,K,E)
+    flat = onehot_e.reshape(G, T * K, E)
+    pos = jnp.cumsum(flat, axis=1) - 1.0                         # (G,TK,E)
+    pos = jnp.sum(pos.reshape(G, T, K, E) * onehot_e, axis=-1)   # (G,T,K)
+    keep = (pos < cap).astype(jnp.float32)
+    onehot_c = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+
+    # dispatch: (G,T,E,cap); combine adds the gate weight.
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot_e, onehot_c)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", onehot_e, onehot_c, gate)
+    dispatch = shard(dispatch.astype(x.dtype), "batch", None, "experts", None)
+    combine = shard(combine.astype(x.dtype), "batch", None, "experts", None)
+
+    xe = jnp.einsum("gtec,gtd->gecd", dispatch, xg)              # expert slots
+    xe = shard(xe, "batch", "experts", None, None)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["we_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, p["we_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(x.dtype) * u
+    ye = jnp.einsum("gecf,efd->gecd", h, p["we_out"])
+    ye = shard(ye, "batch", "experts", None, None)
+    y = jnp.einsum("gtec,gecd->gtd", combine, ye)
+
+    y = y.reshape(B, S, d)
+    if cfg.moe_dense_residual:
+        y = y + swiglu(p, x, prefix="dense_")
+    return y, aux

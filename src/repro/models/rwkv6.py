@@ -1,0 +1,203 @@
+"""RWKV-6 "Finch": token-shift mixing + data-dependent decay WKV recurrence.
+
+The WKV core is computed in chunks: within a chunk the pairwise decay
+``exp(p_{t-1} - p_j)`` (j < t) is always an exp of a non-positive number —
+numerically safe for arbitrarily strong decay, unlike the classic
+``exp(p) / exp(p)`` factorization which overflows. Chunks are carried by a
+``lax.scan`` over an (B, H, K, K) state; this same algorithm is what the
+Pallas ``wkv6`` kernel tiles into VMEM (kernels/wkv6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.common import ParamSpec, group_norm
+
+LORA_DIM = 64
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    L, d, f = cfg.num_layers, cfg.d_model, cfg.d_ff
+    K = cfg.rwkv_head_dim
+    H = d // K
+    dt = cfg.dtype
+    return {
+        # time-mix
+        "tm_mix": ParamSpec((L, 5, d), dt, ("layers", None, None), "uniform", 0.5),
+        "tm_w0": ParamSpec((L, d), "float32", ("layers", None), "decay"),
+        "tm_wa": ParamSpec((L, d, LORA_DIM), dt, ("layers", "fsdp", None)),
+        "tm_wb": ParamSpec((L, LORA_DIM, d), dt, ("layers", None, "fsdp")),
+        "tm_u": ParamSpec((L, H, K), "float32", ("layers", "heads", None),
+                          "uniform", 0.5),
+        "tm_wr": ParamSpec((L, d, d), dt, ("layers", "fsdp", "heads")),
+        "tm_wk": ParamSpec((L, d, d), dt, ("layers", "fsdp", "heads")),
+        "tm_wv": ParamSpec((L, d, d), dt, ("layers", "fsdp", "heads")),
+        "tm_wg": ParamSpec((L, d, d), dt, ("layers", "fsdp", "heads")),
+        "tm_wo": ParamSpec((L, d, d), dt, ("layers", "heads", "fsdp")),
+        "tm_ln_w": ParamSpec((L, d), dt, ("layers", None), "ones"),
+        "tm_ln_b": ParamSpec((L, d), dt, ("layers", None), "zeros"),
+        # channel-mix
+        "cm_mix": ParamSpec((L, 2, d), dt, ("layers", None, None), "uniform", 0.5),
+        "cm_wk": ParamSpec((L, d, f), dt, ("layers", "fsdp", "mlp")),
+        "cm_wv": ParamSpec((L, f, d), dt, ("layers", "mlp", "fsdp")),
+        "cm_wr": ParamSpec((L, d, d), dt, ("layers", "fsdp", None)),
+    }
+
+
+def state_specs(cfg: ModelConfig, batch: int) -> dict:
+    L, d = cfg.num_layers, cfg.d_model
+    K = cfg.rwkv_head_dim
+    H = d // K
+    return {
+        "wkv": ParamSpec((L, batch, H, K, K), "float32",
+                         ("layers", "batch", "heads", None, None), "zeros"),
+        "ts_tm": ParamSpec((L, batch, d), cfg.dtype,
+                           ("layers", "batch", None), "zeros"),
+        "ts_cm": ParamSpec((L, batch, d), cfg.dtype,
+                           ("layers", "batch", None), "zeros"),
+    }
+
+
+def _shift(x: jax.Array, prev: jax.Array) -> jax.Array:
+    """x: (B,T,d); prev: (B,d) last token of the previous segment."""
+    return jnp.concatenate([prev[:, None, :].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def wkv_chunked(r, k, v, lw, u, s0, chunk: int = 16):
+    """Chunked WKV6: r/k/v/lw (B,T,H,K) fp32, u (H,K), s0 (B,H,K,K).
+
+    Returns (y (B,T,H,K), s_final). All exponentials have non-positive
+    arguments (p is a running sum of lw <= 0), so no overflow is possible.
+    """
+    B, T, H, K = r.shape
+    C = min(chunk, T)
+    Tp = (T + C - 1) // C * C
+    if Tp != T:
+        # identity padding: k=v=0 adds nothing to the state, lw=0 (w=1)
+        # leaves it undecayed; padded y rows are sliced off below.
+        pad = [(0, 0), (0, Tp - T), (0, 0), (0, 0)]
+        r, k, v, lw = (jnp.pad(a, pad) for a in (r, k, v, lw))
+    N = Tp // C
+
+    def resh(a):
+        return a.reshape(B, N, C, H, K).transpose(1, 0, 2, 3, 4)
+
+    rs, ks, vs, lws = resh(r), resh(k), resh(v), resh(lw)
+    mask = jnp.tril(jnp.ones((C, C), bool), k=-1)          # j < t
+
+    def body(S, inp):
+        r_, k_, v_, lw_ = inp                               # (B,C,H,K)
+        p = jnp.cumsum(lw_, axis=1)                         # inclusive
+        pprev = p - lw_                                     # exclusive (p_{t-1})
+        diff = pprev[:, :, None] - p[:, None, :]            # (B,Ct,Cj,H,K)
+        e = jnp.where(mask[None, :, :, None, None], jnp.exp(diff), 0.0)
+        att = jnp.einsum("bthi,bjhi,btjhi->bthj", r_, k_, e)
+        y = jnp.einsum("bthj,bjho->btho", att, v_)
+        # diagonal "bonus" term
+        coef = jnp.einsum("bthi,hi,bthi->bth", r_, u, k_)
+        y = y + coef[..., None] * v_
+        # inter-chunk: state entering the chunk
+        y = y + jnp.einsum("bthi,bhio->btho", r_ * jnp.exp(pprev), S)
+        # state update
+        kd = k_ * jnp.exp(p[:, -1:] - p)                    # decay to chunk end
+        S = jnp.exp(p[:, -1])[..., None] * S + \
+            jnp.einsum("bthi,btho->bhio", kd, v_)
+        return S, y
+
+    s_final, ys = jax.lax.scan(body, s0, (rs, ks, vs, lws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, K)
+    return y[:, :T], s_final
+
+
+def _decay(p: dict, xw: jax.Array) -> jax.Array:
+    """Data-dependent decay log-weights lw = -exp(w0 + lora(x)) (<= 0)."""
+    lora = jnp.tanh(jnp.einsum("btd,dr->btr", xw.astype(jnp.float32),
+                               p["tm_wa"].astype(jnp.float32)))
+    w_raw = p["tm_w0"].astype(jnp.float32) + jnp.einsum(
+        "btr,re->bte", lora, p["tm_wb"].astype(jnp.float32))
+    w_raw = jnp.clip(w_raw, -12.0, 3.0)
+    return -jnp.exp(w_raw)
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array,
+             s0: jax.Array):
+    """RWKV6 attention replacement. Returns (y, new_ts, new_state)."""
+    B, T, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    xprev = _shift(x, ts_prev)
+    mix = p["tm_mix"].astype(x.dtype)                       # (5, d)
+    xr, xk, xv, xw, xg = [x + (xprev - x) * mix[i] for i in range(5)]
+
+    r = jnp.einsum("btd,de->bte", xr, p["tm_wr"]).reshape(B, T, H, K)
+    k = jnp.einsum("btd,de->bte", xk, p["tm_wk"]).reshape(B, T, H, K)
+    v = jnp.einsum("btd,de->bte", xv, p["tm_wv"]).reshape(B, T, H, K)
+    g = jnp.einsum("btd,de->bte", xg, p["tm_wg"])
+    lw = _decay(p, xw).reshape(B, T, H, K)
+
+    y, s1 = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), lw,
+                        p["tm_u"].astype(jnp.float32), s0)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    y = group_norm(y, p["tm_ln_w"], p["tm_ln_b"], H, cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = shard(y, "batch", "seq", "heads")
+    return jnp.einsum("btd,de->bte", y, p["tm_wo"]), x[:, -1], s1
+
+
+def time_mix_step(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array,
+                  s0: jax.Array):
+    """Single-token decode step. x: (B,1,d); s0: (B,H,K,K) fp32."""
+    B, _, d = x.shape
+    K = cfg.rwkv_head_dim
+    H = d // K
+    mix = p["tm_mix"].astype(x.dtype)
+    xp = ts_prev[:, None, :].astype(x.dtype)
+    xr, xk, xv, xw, xg = [x + (xp - x) * mix[i] for i in range(5)]
+
+    proj = lambda a, w: jnp.einsum("btd,de->bte", a, w)[:, 0]   # (B,d)
+    r = proj(xr, p["tm_wr"]).reshape(B, H, K).astype(jnp.float32)
+    k = proj(xk, p["tm_wk"]).reshape(B, H, K).astype(jnp.float32)
+    v = proj(xv, p["tm_wv"]).reshape(B, H, K).astype(jnp.float32)
+    g = proj(xg, p["tm_wg"])
+    w = jnp.exp(_decay(p, xw)[:, 0]).reshape(B, H, K)           # per-channel
+    u = p["tm_u"].astype(jnp.float32)
+
+    # y = r . (S + (u*k) v^T);  S' = diag(w) S + k v^T
+    kv = jnp.einsum("bhi,bho->bhio", k, v)
+    y = jnp.einsum("bhi,bhio->bho", r, s0 + u[None, :, :, None] * kv)
+    s1 = w[..., None] * s0 + kv
+    y = y.reshape(B, d).astype(x.dtype)
+    y = group_norm(y, p["tm_ln_w"], p["tm_ln_b"], H, cfg.norm_eps)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("bd,de->be", y, p["tm_wo"])[:, None], x[:, -1], s1
+
+
+def channel_mix(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array):
+    """RWKV6 FFN replacement. Returns (y, new_ts)."""
+    xprev = _shift(x, ts_prev)
+    mix = p["cm_mix"].astype(x.dtype)
+    xk = x + (xprev - x) * mix[0]
+    xr = x + (xprev - x) * mix[1]
+    k = jnp.einsum("btd,df->btf", xk, p["cm_wk"])
+    k = shard(jnp.square(jax.nn.relu(k)), "batch", "seq", "mlp")
+    kv = jnp.einsum("btf,fd->btd", k, p["cm_wv"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr,
+                                  p["cm_wr"]).astype(jnp.float32))
+    return r.astype(x.dtype) * kv, x[:, -1]
+
+
+def channel_mix_step(cfg: ModelConfig, p: dict, x: jax.Array,
+                     ts_prev: jax.Array):
+    xp = ts_prev[:, None, :].astype(x.dtype)
+    mix = p["cm_mix"].astype(x.dtype)
+    xk = x + (xp - x) * mix[0]
+    xr = x + (xp - x) * mix[1]
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["cm_wk"])))
+    kv = jnp.einsum("btf,fd->btd", k, p["cm_wv"])
+    r = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr,
+                                  p["cm_wr"]).astype(jnp.float32))
+    return r.astype(x.dtype) * kv, x[:, -1]

@@ -1,0 +1,273 @@
+"""Family-polymorphic decoder stack for all ten assigned architectures.
+
+One block layout per family:
+
+  dense/moe/vlm/audio :  x += Attn(LN(x));        x += FFN|MoE(LN(x))
+  ssm (rwkv6)         :  x += TimeMix(LN(x));     x += ChannelMix(LN(x))
+  hybrid (hymba)      :  x += (Attn+Mamba)(LN(x))/2;  x += FFN(LN(x))
+
+Layers either run under ``lax.scan`` over stacked params (O(1) HLO — used by
+smoke tests and real training) or statically unrolled (used by the dry-run so
+``cost_analysis`` FLOPs/bytes are exact; XLA's while-loop cost model does not
+multiply by trip count).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import mamba as mam
+from repro.models import mlp as mlpm
+from repro.models import rwkv6 as rwkv
+from repro.models.common import ParamSpec, rms_norm
+
+AUX_LOSS_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------------------
+# Specs
+# ---------------------------------------------------------------------------
+
+def model_specs(cfg: ModelConfig) -> dict:
+    L, d, V = cfg.num_layers, cfg.d_model, cfg.vocab_size
+    dt = cfg.dtype
+    specs: dict[str, Any] = {
+        "ln1": ParamSpec((L, d), dt, ("layers", None), "ones"),
+        "ln2": ParamSpec((L, d), dt, ("layers", None), "ones"),
+        "final_norm": ParamSpec((d,), dt, (None,), "ones"),
+    }
+    if cfg.input_kind == "tokens":
+        specs["embed"] = ParamSpec((V, d), dt, ("vocab", "embed"), "embed")
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, V), dt, ("embed", "vocab"))
+
+    if cfg.family == "ssm":
+        specs.update(rwkv.rwkv_specs(cfg))
+    else:
+        specs.update(attn.attn_specs(cfg))
+        if cfg.family == "hybrid":
+            specs.update(mam.mamba_specs(cfg))
+            specs.update(mlpm.mlp_specs(cfg))
+        elif cfg.num_experts > 0:
+            specs.update(mlpm.moe_specs(cfg))
+        else:
+            specs.update(mlpm.mlp_specs(cfg))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Decode-state specs (KV cache / recurrent states) per family."""
+    if cfg.family == "ssm":
+        return rwkv.state_specs(cfg, batch)
+    c = attn.cache_specs(cfg, batch, seq_len)
+    if cfg.family == "hybrid":
+        c.update(mam.mamba_state_specs(cfg, batch))
+    return c
+
+
+_BLOCK_KEYS_GLOBAL = ("embed", "lm_head", "final_norm")
+
+
+def split_params(params: dict):
+    blocks = {k: v for k, v in params.items() if k not in _BLOCK_KEYS_GLOBAL}
+    glob = {k: v for k, v in params.items() if k in _BLOCK_KEYS_GLOBAL}
+    return glob, blocks
+
+
+# ---------------------------------------------------------------------------
+# Blocks (per-layer params, i.e. the leading L dim already sliced away)
+# ---------------------------------------------------------------------------
+
+def block_full(cfg: ModelConfig, p: dict, x: jax.Array, positions: jax.Array,
+               want_cache: bool):
+    """Full-sequence block. Returns (x, cache_entry, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache: dict = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        B = x.shape[0]
+        H = cfg.d_model // cfg.rwkv_head_dim
+        s0 = jnp.zeros((B, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                       jnp.float32)
+        ts0 = jnp.zeros((B, cfg.d_model), x.dtype)
+        y, ts_tm, s1 = rwkv.time_mix(cfg, p, h, ts0, s0)
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y2, ts_cm = rwkv.channel_mix(cfg, p, h2, ts0)
+        x = x + y2
+        if want_cache:
+            cache = {"wkv": s1, "ts_tm": ts_tm.astype(cfg.dtype),
+                     "ts_cm": ts_cm.astype(cfg.dtype)}
+        return x, cache, aux
+
+    if cfg.family == "hybrid":
+        B = x.shape[0]
+        if want_cache:
+            ya, (kc, vc) = attn.prefill_attention(cfg, p, h, positions)
+        else:
+            ya = attn.full_attention(cfg, p, h, positions)
+        h0 = jnp.zeros((B, cfg.d_model, cfg.ssm_state), jnp.float32)
+        ym, h1 = mam.mamba_mix(cfg, p, h, h0)
+        x = x + 0.5 * (ya + ym)
+        if want_cache:
+            cache = {"k": kc, "v": vc, "ssm": h1}
+    else:
+        if want_cache:
+            ya, (kc, vc) = attn.prefill_attention(cfg, p, h, positions)
+            cache = {"k": kc, "v": vc}
+        else:
+            ya = attn.full_attention(cfg, p, h, positions)
+        x = x + ya
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts > 0 and cfg.family != "hybrid":
+        y2, aux = mlpm.moe_ffn(cfg, p, h2)
+    else:
+        y2 = mlpm.swiglu(p, h2)
+    x = x + y2
+    return x, cache, aux
+
+
+def block_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
+                 cache: dict):
+    """One-token block. x (B,1,d); cache entries are per-layer slices."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "ssm":
+        y, ts_tm, s1 = rwkv.time_mix_step(cfg, p, h, cache["ts_tm"],
+                                          cache["wkv"])
+        x = x + y
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y2, ts_cm = rwkv.channel_mix_step(cfg, p, h2, cache["ts_cm"])
+        x = x + y2
+        return x, {"wkv": s1, "ts_tm": ts_tm.astype(cfg.dtype),
+                   "ts_cm": ts_cm.astype(cfg.dtype)}
+
+    if cfg.family == "hybrid":
+        ya, kc, vc = attn.decode_attention(cfg, p, h, pos, cache["k"],
+                                           cache["v"])
+        ym, h1 = mam.mamba_step(cfg, p, h, cache["ssm"])
+        x = x + 0.5 * (ya + ym)
+        new_cache = {"k": kc, "v": vc, "ssm": h1}
+    else:
+        ya, kc, vc = attn.decode_attention(cfg, p, h, pos, cache["k"],
+                                           cache["v"])
+        x = x + ya
+        new_cache = {"k": kc, "v": vc}
+
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts > 0 and cfg.family != "hybrid":
+        y2, _ = mlpm.moe_ffn(cfg, p, h2)
+    else:
+        y2 = mlpm.swiglu(p, h2)
+    return x + y2, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack runners
+# ---------------------------------------------------------------------------
+
+def _slice_layer(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def run_blocks_full(cfg: ModelConfig, blocks: dict, x: jax.Array,
+                    positions: jax.Array, want_cache: bool,
+                    unroll: bool, remat: bool,
+                    remat_policy: str = "full"):
+    def fn(pl, xc, pos_, wc=want_cache):
+        return block_full(cfg, pl, xc, pos_, wc)
+
+    if remat:
+        # "dots": keep matmul outputs (incl. gathered operands) — backward
+        # does not replay the forward's collectives (§Perf H7); costs HBM.
+        policy = None if remat_policy == "full" else \
+            jax.checkpoint_policies.dots_saveable
+        fn = jax.checkpoint(fn, policy=policy)
+    if unroll:
+        caches, aux = [], jnp.zeros((), jnp.float32)
+        for i in range(cfg.num_layers):
+            x, c, a = fn(_slice_layer(blocks, i), x, positions)
+            caches.append(c)
+            aux = aux + a
+        cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches) \
+            if want_cache else {}
+        return x, cache, aux
+
+    def body(carry, pl):
+        xc, auxc = carry
+        xc, c, a = fn(pl, xc, positions)
+        return (xc, auxc + a), c
+
+    (x, aux), cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   blocks)
+    return x, (cache if want_cache else {}), aux
+
+
+def run_blocks_decode(cfg: ModelConfig, blocks: dict, x: jax.Array,
+                      pos: jax.Array, cache: dict, unroll: bool):
+    if unroll:
+        new = []
+        for i in range(cfg.num_layers):
+            x, c = block_decode(cfg, _slice_layer(blocks, i), x, pos,
+                                _slice_layer(cache, i))
+            new.append(c)
+        return x, jax.tree.map(lambda *xs: jnp.stack(xs), *new)
+
+    def body(xc, inp):
+        pl, cl = inp
+        xc, c = block_decode(cfg, pl, xc, pos, cl)
+        return xc, c
+
+    x, new_cache = jax.lax.scan(body, x, (blocks, cache))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, glob: dict, inputs: jax.Array) -> jax.Array:
+    if cfg.input_kind == "tokens":
+        x = jnp.take(glob["embed"], inputs, axis=0)
+    else:                                   # vlm/audio frontend stub output
+        x = inputs.astype(jnp.dtype(cfg.dtype))
+    return shard(x, "batch", None, "embed")
+
+
+def logits_head(cfg: ModelConfig, glob: dict, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, glob["final_norm"], cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, glob["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, glob["lm_head"])
+    return shard(logits, "batch", None, "vocab")
+
+
+def forward_full(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                 want_cache: bool = False, unroll: bool = False,
+                 remat: bool = False, remat_policy: str = "full"):
+    """Train/prefill forward. inputs: (B,S) int tokens or (B,S,d) embeds.
+    Returns (logits, cache, aux)."""
+    glob, blocks = split_params(params)
+    x = embed_inputs(cfg, glob, inputs)
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, cache, aux = run_blocks_full(cfg, blocks, x, positions, want_cache,
+                                    unroll, remat, remat_policy)
+    return logits_head(cfg, glob, x), cache, aux
+
+
+def forward_decode(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                   pos: jax.Array, cache: dict, unroll: bool = False):
+    """One-token decode. inputs (B,1) tokens or (B,1,d); pos (B,) int32.
+    Returns (logits (B,1,V), new_cache)."""
+    glob, blocks = split_params(params)
+    x = embed_inputs(cfg, glob, inputs)
+    x, new_cache = run_blocks_decode(cfg, blocks, x, pos, cache, unroll)
+    return logits_head(cfg, glob, x), new_cache

@@ -1,0 +1,87 @@
+"""AdamW with global-norm clipping; moments sharded like params (ZeRO-style).
+
+Pure JAX (no optax on the box). Moment specs inherit each parameter's logical
+axes, so the RBL resolver shards optimizer state exactly like the weights —
+on FSDP-sharded params this is ZeRO-3 behaviour for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec, is_spec, spec_tree_map
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: Any            # scalar int32
+    m: Any               # fp32 tree like params
+    v: Any               # fp32 tree like params
+
+
+def adamw_init_specs(param_specs) -> AdamWState:
+    """Spec tree for the optimizer state (materialize via init_params).
+
+    Moment axes rename ``fsdp`` -> ``opt_shard``: under the default rules
+    both map to the data axis (ZeRO-3), but the ``train_zero1`` rule set
+    replicates params over data while keeping moments sharded (ZeRO-1) —
+    the right trade for models whose weights fit per-device, since it
+    removes the 2x-params forward/backward all-gather traffic.
+    """
+    def mom(s: ParamSpec) -> ParamSpec:
+        axes = tuple("opt_shard" if a == "fsdp" else a for a in s.axes)
+        return ParamSpec(s.shape, "float32", axes, "zeros")
+    return AdamWState(
+        step=ParamSpec((), "int32", (), "zeros"),
+        m=spec_tree_map(mom, param_specs),
+        v=spec_tree_map(mom, param_specs),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params,
+                 lr: jax.Array):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_p, AdamWState(step, new_m, new_v), metrics

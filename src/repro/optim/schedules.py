@@ -1,0 +1,14 @@
+"""Learning-rate schedules (pure functions of an int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(step, peak_lr: float, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = peak_lr * jnp.minimum(1.0, (step + 1.0) / max(1, warmup_steps))
+    t = jnp.clip((step - warmup_steps) / max(1, total_steps - warmup_steps),
+                 0.0, 1.0)
+    cos = min_ratio + (1.0 - min_ratio) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

@@ -1,0 +1,115 @@
+"""Batched LM serving engine over the RCB runtime.
+
+The paper's execution flow (Provision -> Bind -> Dispatch -> Sync) drives LM
+serving: RCTC wraps jitted prefill/decode steps as GRAPH_EXEC artifacts
+("compiled ADF graph artifacts"), RIMFS holds the weights, RBL binds, and
+this engine batches user requests through the fused dispatch path with a
+continuous-batching slot table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import rctc
+from repro.core.rtpm import Telemetry
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import transformer as tf
+from repro.models.common import init_params
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    """Fixed-slot continuous batching (decode batch = n_slots)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.greedy = greedy
+        self.telemetry = Telemetry()
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self._slots: list[Optional[Request]] = [None] * max_batch
+        self._pos = np.zeros((max_batch,), np.int32)
+        self._cache = init_params(
+            jax.random.PRNGKey(0), tf.cache_specs(cfg, max_batch, max_seq))
+        self._queue: list[Request] = []
+        # The RCB program view of this service (paper-faithful packaging).
+        self.program = rctc.compile_lm_service(
+            cfg, max_batch, max_seq, self._prefill, self._decode)
+
+    # ----------------------------------------------------------------- api
+    def submit(self, req: Request) -> None:
+        self._queue.append(req)
+
+    def _admit(self) -> None:
+        for i in range(self.max_batch):
+            if self._slots[i] is None and self._queue:
+                req = self._queue.pop(0)
+                self._slots[i] = req
+                # per-slot prefill (batch=1 prompt padded into the slot)
+                prompt = jnp.asarray(req.prompt)[None, :]
+                logits, cache = self._prefill(self.params,
+                                              {"inputs": prompt})
+                # splice the prompt's KV into this slot of the shared cache
+                plen = req.prompt.shape[0]
+                for key in self._cache:
+                    c = self._cache[key]
+                    src = cache[key].astype(c.dtype)
+                    if key in ("k", "v"):
+                        self._cache[key] = jax.lax.dynamic_update_slice(
+                            c, src, (0, i, 0, 0, 0))
+                    else:                        # recurrent states (L,B,...)
+                        self._cache[key] = jax.lax.dynamic_update_slice(
+                            c, src, (0, i) + (0,) * (c.ndim - 2))
+                self._pos[i] = plen
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+
+    def step(self) -> int:
+        """One decode step across all live slots. Returns #live."""
+        self._admit()
+        live = [i for i, r in enumerate(self._slots) if r is not None]
+        if not live:
+            return 0
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i in live:
+            toks[i, 0] = self._slots[i].out_tokens[-1]
+        t0 = time.perf_counter()
+        logits, self._cache = self._decode(
+            self.params, self._cache,
+            {"inputs": jnp.asarray(toks), "pos": jnp.asarray(self._pos)})
+        logits.block_until_ready()
+        self.telemetry.record_latency(time.perf_counter() - t0)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in live:
+            r = self._slots[i]
+            r.out_tokens.append(int(nxt[i]))
+            self._pos[i] += 1
+            if len(r.out_tokens) >= r.max_new or \
+                    self._pos[i] >= self.max_seq - 1:
+                r.done = True
+                self._slots[i] = None
+        return len(live)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and not self._queue:
+                return

@@ -1,0 +1,130 @@
+"""Paged KV-cache management (vLLM-style block tables) on RBL principles.
+
+The paper's RBL owns "dependency and buffer management: tracks intermediate
+buffer usage ... maintains buffer lifetimes for efficient memory
+utilization". For LM serving the scarce buffer is KV-cache memory; this
+module applies the same discipline: physical cache blocks are a flat pool
+(a RIMFS-like arena on device), sequences hold *symbolic* block tables, and
+binding a logical token position to a physical slot is an O(1) table
+lookup — sequences grow/free blocks without ever copying KV data.
+
+Pure-JAX gather/scatter formulation: attention over a paged cache gathers
+the sequence's blocks into contiguous (S, H, D) views per step via
+``jnp.take`` on the pool's block axis (XLA lowers to dynamic-gather; on
+TPU this is the standard paged-attention pattern the Pallas flash-decode
+kernel would consume block-by-block).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+class OutOfBlocksError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Physical pool + symbolic block tables.
+
+    Pool layout: k/v arrays (num_layers, num_blocks, block_size, Hkv, D).
+    A sequence's logical position t lives in physical slot
+    (table[t // block_size], t % block_size).
+    """
+    num_layers: int
+    num_blocks: int
+    block_size: int
+    num_kv_heads: int
+    head_dim: int
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        shape = (self.num_layers, self.num_blocks, self.block_size,
+                 self.num_kv_heads, self.head_dim)
+        self.k = jnp.zeros(shape, jnp.dtype(self.dtype))
+        self.v = jnp.zeros(shape, jnp.dtype(self.dtype))
+        self._free: list[int] = list(range(self.num_blocks))[::-1]
+        self.tables: dict[int, list[int]] = {}     # seq id -> block ids
+        self.lengths: dict[int, int] = {}
+
+    # ------------------------------------------------------------ accounting
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, seq: int) -> list:
+        return list(self.tables.get(seq, ()))
+
+    def utilization(self) -> float:
+        used = self.num_blocks - len(self._free)
+        return used / self.num_blocks
+
+    # ------------------------------------------------------------- lifecycle
+    def allocate(self, seq: int, tokens: int = 0) -> None:
+        if seq in self.tables:
+            raise ValueError(f"seq {seq} already allocated")
+        self.tables[seq] = []
+        self.lengths[seq] = 0
+        if tokens:
+            self._grow(seq, tokens)
+
+    def _grow(self, seq: int, new_tokens: int) -> None:
+        need = (self.lengths[seq] + new_tokens + self.block_size - 1) \
+            // self.block_size
+        while len(self.tables[seq]) < need:
+            if not self._free:
+                raise OutOfBlocksError(
+                    f"pool exhausted ({self.num_blocks} blocks)")
+            self.tables[seq].append(self._free.pop())
+
+    def release(self, seq: int) -> int:
+        """Free all blocks of a finished sequence (O(1) per block, no data
+        movement — the RBL lifetime-management property)."""
+        blocks = self.tables.pop(seq, [])
+        self.lengths.pop(seq, None)
+        self._free.extend(blocks)
+        return len(blocks)
+
+    # ------------------------------------------------------------------- io
+    def append(self, seq: int, layer_k: jax.Array, layer_v: jax.Array) -> None:
+        """Append one token's K/V for ALL layers.
+        layer_k/v: (num_layers, Hkv, D)."""
+        self._grow(seq, 1)
+        t = self.lengths[seq]
+        blk = self.tables[seq][t // self.block_size]
+        off = t % self.block_size
+        self.k = self.k.at[:, blk, off].set(layer_k.astype(self.k.dtype))
+        self.v = self.v.at[:, blk, off].set(layer_v.astype(self.v.dtype))
+        self.lengths[seq] = t + 1
+
+    def gather(self, seq: int, layer: int):
+        """Contiguous (len, Hkv, D) views of one sequence's K/V at a layer
+        (gather over the block axis; no pool copies are retained)."""
+        n = self.lengths[seq]
+        if n == 0:
+            return (jnp.zeros((0, self.num_kv_heads, self.head_dim)),) * 2
+        table = jnp.asarray(self.tables[seq], jnp.int32)
+        kb = jnp.take(self.k[layer], table, axis=0)     # (blocks, bs, H, D)
+        vb = jnp.take(self.v[layer], table, axis=0)
+        flat_k = kb.reshape(-1, self.num_kv_heads, self.head_dim)[:n]
+        flat_v = vb.reshape(-1, self.num_kv_heads, self.head_dim)[:n]
+        return flat_k, flat_v
+
+
+def paged_decode_attention(cache: PagedKVCache, seq: int, layer: int,
+                           q: jax.Array) -> jax.Array:
+    """Single-token attention against a paged sequence.
+    q: (H, D) with H = G * Hkv. Returns (H, D)."""
+    k, v = cache.gather(seq, layer)                     # (n, Hkv, D)
+    h, d = q.shape
+    g = h // cache.num_kv_heads
+    qg = q.reshape(cache.num_kv_heads, g, d).astype(jnp.float32)
+    s = jnp.einsum("hgd,nhd->hgn", qg, k.astype(jnp.float32)) / d ** 0.5
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("hgn,nhd->hgd", p, v.astype(jnp.float32))
+    return o.reshape(h, d).astype(q.dtype)

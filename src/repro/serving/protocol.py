@@ -1,0 +1,109 @@
+"""CRC-32-framed wire protocol (the paper's lwIP + CRC-32 message layer).
+
+Frame layout (little-endian):
+
+  [0:4]  magic  b"AEGW"
+  [4:5]  type   (Msg enum)
+  [5:9]  payload length
+  [9:..] payload
+  [-4:]  CRC-32 (IEEE 0x04C11DB7 == zlib.crc32) over magic..payload
+
+The paper's design note applies verbatim: CRC detects accidental corruption;
+confidentiality/authentication are explicitly out of scope (terminate TLS at
+a gateway for untrusted networks — §5.5).
+"""
+from __future__ import annotations
+
+import enum
+import io
+import json
+import socket
+import struct
+import zlib
+from typing import Any, Optional
+
+import numpy as np
+
+MAGIC = b"AEGW"
+HEADER = struct.Struct("<4sBI")
+
+
+class Msg(enum.IntEnum):
+    PROVISION = 1          # payload: RIMFS image (+ program blob)
+    INFER_REQUEST = 2      # payload: npz tensors
+    INFER_RESPONSE = 3
+    TELEMETRY = 4          # payload: json
+    HEARTBEAT = 5
+    ERROR = 6
+    SHUTDOWN = 7
+
+
+class ProtocolError(ValueError):
+    pass
+
+
+def encode_frame(kind: Msg, payload: bytes) -> bytes:
+    head = HEADER.pack(MAGIC, int(kind), len(payload))
+    crc = zlib.crc32(head + payload) & 0xFFFFFFFF
+    return head + payload + struct.pack("<I", crc)
+
+
+def decode_frame(data: bytes) -> tuple:
+    magic, kind, n = HEADER.unpack_from(data, 0)
+    if magic != MAGIC:
+        raise ProtocolError(f"bad magic {magic!r}")
+    end = HEADER.size + n
+    payload = data[HEADER.size:end]
+    (crc,) = struct.unpack_from("<I", data, end)
+    if crc != (zlib.crc32(data[:end]) & 0xFFFFFFFF):
+        raise ProtocolError("frame CRC mismatch")
+    return Msg(kind), payload
+
+
+# --------------------------------------------------------------- tensor io
+def pack_tensors(tensors: dict) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **{k: np.asarray(v) for k, v in tensors.items()})
+    return buf.getvalue()
+
+
+def unpack_tensors(payload: bytes) -> dict:
+    with np.load(io.BytesIO(payload)) as z:
+        return {k: z[k] for k in z.files}
+
+
+def pack_json(obj: Any) -> bytes:
+    return json.dumps(obj).encode()
+
+
+def unpack_json(payload: bytes) -> Any:
+    return json.loads(payload.decode())
+
+
+# --------------------------------------------------------------- socket io
+def send_frame(sock: socket.socket, kind: Msg, payload: bytes) -> None:
+    sock.sendall(encode_frame(kind, payload))
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n > 0:
+        c = sock.recv(min(n, 1 << 20))
+        if not c:
+            raise ConnectionError("peer closed")
+        chunks.append(c)
+        n -= len(c)
+    return b"".join(chunks)
+
+
+def recv_frame(sock: socket.socket) -> tuple:
+    head = _recv_exact(sock, HEADER.size)
+    magic, kind, n = HEADER.unpack(head)
+    if magic != MAGIC:
+        raise ProtocolError(f"bad magic {magic!r}")
+    rest = _recv_exact(sock, n + 4)
+    payload = rest[:n]
+    (crc,) = struct.unpack_from("<I", rest, n)
+    if crc != (zlib.crc32(head + payload) & 0xFFFFFFFF):
+        raise ProtocolError("frame CRC mismatch")
+    return Msg(kind), payload

@@ -1,0 +1,146 @@
+"""Network-attached inference service (RTPM host-connectivity role).
+
+A socket server speaking the CRC-framed protocol: a client PROVISIONs a
+model (RIMFS image + RCB program bytes), then streams INFER_REQUESTs; the
+server executes them through the generic RCB executor and answers with
+INFER_RESPONSEs plus TELEMETRY on demand — the paper's "baremetal runtime as
+a network-attached inference service" operating mode.
+"""
+from __future__ import annotations
+
+import socket
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.executor import Executor
+from repro.core.rtpm import Platform
+from repro.serving import protocol as proto
+
+
+class InferenceServer:
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 artifacts: Optional[dict] = None):
+        self.platform = Platform()
+        self.executor = Executor(rtpm=self.platform)
+        self.artifacts = artifacts or {}
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(8)
+        self.address = self._sock.getsockname()
+        self._bound = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> tuple:
+        self._thread = threading.Thread(target=self._serve, daemon=True)
+        self._thread.start()
+        return self.address
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            # unblock accept()
+            socket.create_connection(self.address, timeout=1).close()
+        except OSError:
+            pass
+        if self._thread:
+            self._thread.join(timeout=5)
+        self._sock.close()
+
+    # ------------------------------------------------------------- serving
+    def _serve(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            if self._stop.is_set():
+                conn.close()
+                return
+            t = threading.Thread(target=self._handle, args=(conn,),
+                                 daemon=True)
+            t.start()
+
+    def _handle(self, conn: socket.socket) -> None:
+        with conn:
+            while not self._stop.is_set():
+                try:
+                    kind, payload = proto.recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    if kind == proto.Msg.PROVISION:
+                        self._provision(payload)
+                        proto.send_frame(conn, proto.Msg.TELEMETRY,
+                                         proto.pack_json({"status": "ready"}))
+                    elif kind == proto.Msg.INFER_REQUEST:
+                        out = self._infer(proto.unpack_tensors(payload))
+                        proto.send_frame(conn, proto.Msg.INFER_RESPONSE,
+                                         proto.pack_tensors(out))
+                    elif kind == proto.Msg.TELEMETRY:
+                        proto.send_frame(
+                            conn, proto.Msg.TELEMETRY,
+                            proto.pack_json(
+                                self.platform.telemetry.summary(warmup=1)))
+                    elif kind == proto.Msg.HEARTBEAT:
+                        self.platform.heartbeats.beat(
+                            proto.unpack_json(payload).get("worker", "?"))
+                    elif kind == proto.Msg.SHUTDOWN:
+                        self._stop.set()
+                        return
+                except Exception as e:  # report, keep serving
+                    proto.send_frame(conn, proto.Msg.ERROR,
+                                     proto.pack_json({"error": str(e)}))
+
+    def _provision(self, payload: bytes) -> None:
+        # payload = frame-in-frame: [image_frame][program_frame]
+        k1, image = proto.decode_frame(payload)
+        rest = payload[proto.HEADER.size + len(image) + 4:]
+        k2, prog = proto.decode_frame(rest)
+        self.platform.provision(image=image, program_bytes=prog)
+        if self.artifacts:
+            self.platform.program.artifacts.update(self.artifacts)
+        self._bound = self.platform.bind()
+
+    def _infer(self, tensors: dict) -> dict:
+        if self._bound is None:
+            raise RuntimeError("not provisioned")
+        t0 = time.perf_counter()
+        out = self.executor.run(self._bound, inputs=tensors,
+                                rimfs=self.platform.rimfs)
+        self.platform.telemetry.record_latency(time.perf_counter() - t0)
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+# ------------------------------------------------------------------ client
+class Client:
+    def __init__(self, address: tuple):
+        self.sock = socket.create_connection(address)
+
+    def provision(self, image: bytes, program_bytes: bytes) -> dict:
+        inner = proto.encode_frame(proto.Msg.PROVISION, image) + \
+            proto.encode_frame(proto.Msg.PROVISION, program_bytes)
+        proto.send_frame(self.sock, proto.Msg.PROVISION, inner)
+        kind, payload = proto.recv_frame(self.sock)
+        return proto.unpack_json(payload)
+
+    def infer(self, **tensors) -> dict:
+        proto.send_frame(self.sock, proto.Msg.INFER_REQUEST,
+                         proto.pack_tensors(tensors))
+        kind, payload = proto.recv_frame(self.sock)
+        if kind == proto.Msg.ERROR:
+            raise RuntimeError(proto.unpack_json(payload)["error"])
+        return proto.unpack_tensors(payload)
+
+    def telemetry(self) -> dict:
+        proto.send_frame(self.sock, proto.Msg.TELEMETRY, b"")
+        _, payload = proto.recv_frame(self.sock)
+        return proto.unpack_json(payload)
+
+    def close(self) -> None:
+        self.sock.close()

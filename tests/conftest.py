@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — smoke tests and
+benchmarks must see the real single CPU device; only launch/dryrun.py (and
+explicit subprocess tests) force 512 placeholder devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

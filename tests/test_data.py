@@ -1,0 +1,52 @@
+"""Data pipeline: determinism, sharding consistency, replay."""
+import numpy as np
+
+from repro.data.pipeline import SyntheticLM
+
+
+def test_shards_tile_global_batch():
+    ds = SyntheticLM(vocab_size=256, seq_len=16, global_batch=8)
+    g = ds.global_batch_at(3)
+    parts = [ds.shard_at(3, i, 4) for i in range(4)]
+    stitched = np.concatenate([p["inputs"] for p in parts], axis=0)
+    np.testing.assert_array_equal(g["inputs"], stitched)
+
+
+def test_deterministic_replay():
+    ds = SyntheticLM(vocab_size=512, seq_len=8, global_batch=4)
+    a = ds.global_batch_at(11)
+    b = ds.global_batch_at(11)
+    np.testing.assert_array_equal(a["inputs"], b["inputs"])
+    c = ds.global_batch_at(12)
+    assert not np.array_equal(a["inputs"], c["inputs"])
+
+
+def test_elastic_resharding_preserves_stream():
+    """8-way and 2-way fleets must see the same global batch (elastic
+    restart correctness)."""
+    ds = SyntheticLM(vocab_size=128, seq_len=8, global_batch=8)
+    wide = np.concatenate([ds.shard_at(5, i, 8)["inputs"] for i in range(8)])
+    narrow = np.concatenate([ds.shard_at(5, i, 2)["inputs"]
+                             for i in range(2)])
+    np.testing.assert_array_equal(wide, narrow)
+
+
+def test_targets_are_shifted_inputs():
+    ds = SyntheticLM(vocab_size=64, seq_len=12, global_batch=2)
+    b = ds.global_batch_at(0)
+    np.testing.assert_array_equal(b["inputs"][:, 1:], b["targets"][:, :-1])
+
+
+def test_learnable_structure():
+    """Next token is a (mostly) deterministic function of hidden state —
+    a bigram table should beat uniform entropy by a wide margin."""
+    ds = SyntheticLM(vocab_size=64, seq_len=256, global_batch=4)
+    b = ds.global_batch_at(0)
+    x = b["inputs"].reshape(-1)
+    y = b["targets"].reshape(-1)
+    table = {}
+    for xi, yi in zip(x, y):
+        table.setdefault(int(xi), {}).setdefault(int(yi), 0)
+        table[int(xi)][int(yi)] += 1
+    correct = sum(max(c.values()) for c in table.values())
+    assert correct / len(x) > 0.25      # >> 1/64 uniform

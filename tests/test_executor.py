@@ -1,0 +1,136 @@
+"""Executor: eager == fused over the op vocabulary; paper's data-path checks."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import rbl, rctc, rimfs
+from repro.core.executor import Executor
+from repro.core.rcb import Op, RCB, RCBOp, RCBProgram, TensorDesc
+
+
+def test_xgemm_64_exact_match(rng):
+    """Paper §4.3: all 4096 outputs of the 64x64 XGEMM match the reference."""
+    prog = rctc.compile_matmul(64)
+    a = rng.randn(64, 64).astype(np.float32)
+    b = rng.randn(64, 64).astype(np.float32)
+    img = rimfs.pack({"b": b})
+    bound = rbl.bind(prog, rimfs=rimfs.mount(img), inputs={"a": a})
+    out = np.asarray(Executor().run(bound)["output"])
+    ref = a @ b
+    matches = int(np.sum(np.isclose(out, ref, rtol=1e-5, atol=1e-5)))
+    assert matches == 4096, f"{matches}/4096"
+
+
+def test_conv_relu_softmax_pipeline(rng):
+    """Paper §4.3: the 9-output neural pipeline matches NumPy exactly."""
+    prog = rctc.compile_conv_relu_softmax(n=1, h=8, w=8, cin=3, cout=9)
+    x = rng.randn(1, 8, 8, 3).astype(np.float32)
+    w = rng.randn(3, 3, 3, 9).astype(np.float32)
+    bound = rbl.bind(prog, rimfs=rimfs.mount(rimfs.pack({"w_conv": w})),
+                     inputs={"input": x})
+    out = np.asarray(Executor().run(bound)["output"])
+    # NumPy reference
+    import jax
+    ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    ref = np.maximum(np.asarray(ref), 0).mean(axis=(1, 2))
+    ref = np.exp(ref - ref.max()) / np.exp(ref - ref.max()).sum()
+    assert out.shape == (1, 9)
+    matches = int(np.sum(np.isclose(out, ref, rtol=1e-5, atol=1e-6)))
+    assert matches == 9, f"{matches}/9"
+
+
+def _mixed_program():
+    """Touch every compute opcode once."""
+    t = {
+        "x": TensorDesc("x", (4, 8, 8, 3), "float32", "input"),
+        "w": TensorDesc("w", (3, 3, 3, 4), "float32", "weight"),
+        "scale": TensorDesc("scale", (4,), "float32", "weight"),
+        "shift": TensorDesc("shift", (4,), "float32", "weight"),
+        "fcw": TensorDesc("fcw", (4, 6), "float32", "weight"),
+        "fcb": TensorDesc("fcb", (6,), "float32", "weight"),
+        "t1": TensorDesc("t1", (4, 8, 8, 4), "float32", "scratch"),
+        "t2": TensorDesc("t2", (4, 8, 8, 4), "float32", "scratch"),
+        "t3": TensorDesc("t3", (4, 8, 8, 4), "float32", "scratch"),
+        "t4": TensorDesc("t4", (4, 4, 4, 4), "float32", "scratch"),
+        "t5": TensorDesc("t5", (4, 4), "float32", "scratch"),
+        "t6": TensorDesc("t6", (4, 6), "float32", "scratch"),
+        "out": TensorDesc("out", (4, 6), "float32", "output"),
+    }
+    ops = [
+        RCBOp(Op.CONV2D, ("t1",), ("x", "w"), {"stride": [1, 1],
+                                               "padding": "SAME"}),
+        RCBOp(Op.SCALE_SHIFT, ("t2",), ("t1", "scale", "shift")),
+        RCBOp(Op.RELU, ("t3",), ("t2",)),
+        RCBOp(Op.MAXPOOL, ("t4",), ("t3",), {"window": [2, 2],
+                                             "stride": [2, 2]}),
+        RCBOp(Op.AVGPOOL_GLOBAL, ("t5",), ("t4",)),
+        RCBOp(Op.DENSE, ("t6",), ("t5", "fcw", "fcb")),
+        RCBOp(Op.SOFTMAX, ("out",), ("t6",)),
+        RCBOp(Op.FENCE),
+    ]
+    return RCBProgram("mixed", t, [RCB(0, "layer", (), tuple(ops))])
+
+
+def test_eager_equals_fused(rng):
+    """The paper's portability property: the same RCBs drive both modes."""
+    prog = _mixed_program()
+    weights = {
+        "w": rng.randn(3, 3, 3, 4).astype(np.float32),
+        "scale": rng.rand(4).astype(np.float32) + 0.5,
+        "shift": rng.randn(4).astype(np.float32),
+        "fcw": rng.randn(4, 6).astype(np.float32),
+        "fcb": rng.randn(6).astype(np.float32),
+    }
+    x = rng.randn(4, 8, 8, 3).astype(np.float32)
+    fs = rimfs.mount(rimfs.pack(weights))
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs, inputs={"x": x})
+    out_eager = np.asarray(ex.run(bound)["out"])
+
+    bound2 = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound2)
+    out_fused = np.asarray(fused({"x": x}, ex.weights_from(bound2))["out"])
+    np.testing.assert_allclose(out_eager, out_fused, rtol=1e-6, atol=1e-6)
+
+
+def test_liveness_frees_scratch(rng):
+    prog = _mixed_program()
+    last = rbl.liveness(prog)
+    assert last["t1"] < last["t3"] < last["t5"]
+
+
+def test_quant_dequant_ops(rng):
+    t = {
+        "x": TensorDesc("x", (8, 8), "float32", "input"),
+        "q": TensorDesc("q", (8, 8), "int8", "scratch"),
+        "y": TensorDesc("y", (8, 8), "float32", "output"),
+    }
+    ops = [RCBOp(Op.QUANTIZE, ("q",), ("x",), {"scale": 0.05}),
+           RCBOp(Op.DEQUANT, ("y",), ("q",), {"scale": 0.05})]
+    prog = RCBProgram("q", t, [RCB(0, "layer", (), tuple(ops))])
+    x = (rng.rand(8, 8).astype(np.float32) - 0.5) * 10
+    bound = rbl.bind(prog, inputs={"x": x})
+    y = np.asarray(Executor().run(bound)["y"])
+    np.testing.assert_allclose(y, np.clip(np.round(x / 0.05), -127, 127)
+                               * 0.05, atol=1e-6)
+
+
+def test_missing_input_raises(rng):
+    prog = rctc.compile_matmul(8)
+    img = rimfs.pack({"b": rng.randn(8, 8).astype(np.float32)})
+    bound = rbl.bind(prog, rimfs=rimfs.mount(img))
+    with pytest.raises(ValueError, match="missing input"):
+        Executor().run(bound)
+
+
+def test_driver_stats_count_dispatches(rng):
+    prog = rctc.compile_matmul(16)
+    img = rimfs.pack({"b": rng.randn(16, 16).astype(np.float32)})
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=rimfs.mount(img),
+                     inputs={"a": rng.randn(16, 16).astype(np.float32)})
+    ex.run(bound)
+    assert ex.driver.stats.get("dispatch", 0) >= 1
+    assert ex.driver.stats.get("fence", 0) >= 1

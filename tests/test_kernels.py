@@ -1,0 +1,129 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref.py
+oracles (interpret mode executes the kernel body on CPU)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.int8_matmul.ops import int8_matmul
+from repro.kernels.int8_matmul.ref import int8_matmul_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+@pytest.mark.parametrize("shape", [
+    (1, 128, 2, 2, 32), (2, 64, 4, 2, 64), (1, 256, 2, 1, 16),
+    (2, 128, 6, 3, 8),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(shape, dtype, rng):
+    B, S, H, Hkv, D = shape
+    q = jnp.asarray(rng.randn(B, S, H, D), dtype)
+    k = jnp.asarray(rng.randn(B, S, Hkv, D), dtype)
+    v = jnp.asarray(rng.randn(B, S, Hkv, D), dtype)
+    o = flash_attention(q, k, v, block_q=64, block_k=64)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, D)
+    r = attention_ref(qr, kr, vr, group=H // Hkv)
+    r = r.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("shape,chunk", [
+    ((2, 128, 2, 64), 64), ((1, 64, 4, 32), 16), ((2, 96, 1, 16), 32),
+    ((1, 32, 2, 8), 8),
+])
+def test_wkv6(shape, chunk, rng):
+    B, T, H, K = shape
+    r = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, K), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    lw = -jnp.exp(jnp.asarray(rng.randn(B, T, H, K), jnp.float32))
+    u = jnp.asarray(rng.randn(H, K), jnp.float32) * 0.5
+    y = wkv6(r, k, v, lw, u, chunk=chunk)
+
+    def fold(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, K)
+
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    yr = wkv6_ref(fold(r), fold(k), fold(v), fold(lw), uf)
+    yr = yr.reshape(B, H, T, K).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_wkv6_extreme_decay_no_overflow(rng):
+    """Decay ~0 (log-weight very negative) must not overflow/NaN — the
+    pairwise-difference formulation guarantees non-positive exponents."""
+    B, T, H, K = 1, 64, 1, 16
+    r = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    v = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    lw = jnp.full((B, T, H, K), -80.0)            # decay ~ e^-80
+    u = jnp.zeros((H, K), jnp.float32)
+    y = wkv6(r, k, v, lw, u, chunk=16)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+@pytest.mark.parametrize("shape,chunk,db", [
+    ((2, 64, 32, 8), 16, 16), ((1, 32, 64, 16), 8, 32),
+    ((1, 128, 16, 4), 32, 16),
+])
+def test_ssm_scan(shape, chunk, db, rng):
+    B, T, di, N = shape
+    da = -jnp.exp(jnp.asarray(rng.randn(B, T, di, N), jnp.float32))
+    bx = jnp.asarray(rng.randn(B, T, di, N), jnp.float32)
+    c = jnp.asarray(rng.randn(B, T, N), jnp.float32)
+    y = ssm_scan(da, bx, c, chunk=chunk, d_block=db)
+    yr = ssm_scan_ref(da, bx, c)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("mkn,blocks", [
+    ((128, 256, 128), (64, 64, 64)), ((64, 64, 64), (32, 32, 32)),
+    ((256, 128, 64), (128, 64, 128)),
+])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul(mkn, blocks, out_dtype, rng):
+    M, K, N = mkn
+    bm, bn, bk = blocks
+    x = jnp.asarray(rng.randint(-127, 128, (M, K)), jnp.int8)
+    w = jnp.asarray(rng.randint(-127, 128, (K, N)), jnp.int8)
+    s = jnp.asarray(rng.rand(N).astype(np.float32))
+    y = int8_matmul(x, w, s, block_m=bm, block_n=bn, block_k=bk,
+                    out_dtype=out_dtype)
+    yr = int8_matmul_ref(x, w, s, out_dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               rtol=1e-2 if out_dtype == jnp.bfloat16 else 0,
+                               atol=1e-2 if out_dtype == jnp.bfloat16 else 0)
+
+
+def test_model_chunked_wkv_matches_oracle(rng):
+    """models/rwkv6.wkv_chunked (the lowering path) against the oracle."""
+    from repro.models.rwkv6 import wkv_chunked
+    B, T, H, K = 2, 64, 2, 32
+    r = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    k = jnp.asarray(rng.randn(B, T, H, K), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(B, T, H, K), jnp.float32)
+    lw = -jnp.exp(jnp.asarray(rng.randn(B, T, H, K), jnp.float32))
+    u = jnp.asarray(rng.randn(H, K), jnp.float32) * 0.5
+    y, _ = wkv_chunked(r, k, v, lw, u, jnp.zeros((B, H, K, K)), chunk=16)
+
+    def fold(a):
+        return a.transpose(0, 2, 1, 3).reshape(B * H, T, K)
+
+    uf = jnp.broadcast_to(u[None], (B, H, K)).reshape(B * H, K)
+    yr = wkv6_ref(fold(r), fold(k), fold(v), fold(lw), uf)
+    yr = yr.reshape(B, H, T, K).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=5e-4, rtol=5e-4)

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (reduced same-family configs) + decode
+consistency: the incremental decode path must reproduce full-forward logits.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHES, get_config
+from repro.launch.steps import make_train_step
+from repro.models import transformer as tf
+from repro.models.common import init_params
+from repro.optim.adamw import adamw_init_specs
+
+B, S = 2, 32
+
+
+def _inputs(cfg, rng, seq=S):
+    if cfg.input_kind == "tokens":
+        return jnp.asarray(rng.randint(0, cfg.vocab_size, (B, seq)))
+    return jnp.asarray(rng.randn(B, seq, cfg.d_model), jnp.float32)
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+def test_forward_shapes_and_finite(arch, rng):
+    cfg = get_config(arch + "-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    logits, cache, aux = tf.forward_full(cfg, params, _inputs(cfg, rng),
+                                         want_cache=True)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+def test_one_train_step_no_nans(arch, rng):
+    cfg = get_config(arch + "-smoke")
+    specs = tf.model_specs(cfg)
+    params = init_params(jax.random.PRNGKey(0), specs)
+    opt = init_params(jax.random.PRNGKey(1), adamw_init_specs(specs))
+    step = jax.jit(make_train_step(cfg))
+    batch = {"inputs": _inputs(cfg, rng),
+             "targets": jnp.asarray(rng.randint(0, cfg.vocab_size, (B, S)))}
+    params2, opt2, metrics = step(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    delta = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda a, b: float(jnp.sum(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), params,
+            params2))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCHES)
+def test_decode_matches_full_forward(arch, rng):
+    """Prefill S tokens, decode token S; logits must match a full forward
+    over S+1 tokens (the strongest single consistency check a serving stack
+    can have)."""
+    cfg = get_config(arch + "-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    full_inp = _inputs(cfg, rng, seq=S + 1)
+    logits_full, _, _ = tf.forward_full(cfg, params, full_inp)
+
+    prefix = full_inp[:, :S]
+    _, cache, _ = tf.forward_full(cfg, params, prefix, want_cache=True)
+
+    # widen attention caches from S to S+8 slots (recurrent states keep shape)
+    cs = tf.cache_specs(cfg, B, S + 8)
+    zc = init_params(jax.random.PRNGKey(2), cs)
+    if "k" in cache:
+        win = zc["k"].shape[2]
+        zc = dict(zc)
+        ks = cache["k"][:, :, -win:] if cache["k"].shape[2] > win \
+            else cache["k"]
+        vs = cache["v"][:, :, -win:] if cache["v"].shape[2] > win \
+            else cache["v"]
+        zc["k"] = zc["k"].at[:, :, :ks.shape[2]].set(ks.astype(zc["k"].dtype))
+        zc["v"] = zc["v"].at[:, :, :vs.shape[2]].set(vs.astype(zc["v"].dtype))
+        for key in cache:
+            if key not in ("k", "v"):
+                zc[key] = cache[key]
+    else:
+        zc = cache
+
+    pos = jnp.full((B,), S, jnp.int32)
+    nxt = full_inp[:, S:S + 1]
+    logits_dec, _ = tf.forward_decode(cfg, params, nxt, pos, zc)
+
+    a = np.asarray(logits_full[:, -1], np.float32)
+    b = np.asarray(logits_dec[:, 0], np.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_limits_attention(rng):
+    """Hymba SWA: token t must not see tokens older than the window."""
+    cfg = get_config("hymba-1.5b-smoke")
+    assert cfg.sliding_window == 16
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    x = jnp.asarray(rng.randint(0, cfg.vocab_size, (1, 32)))
+    l1, _, _ = tf.forward_full(cfg, params, x)
+    # perturb a token far outside every later window
+    x2 = x.at[0, 0].set((int(x[0, 0]) + 7) % cfg.vocab_size)
+    l2, _, _ = tf.forward_full(cfg, params, x2)
+    # last position: outside window of position 0 for attention; mamba branch
+    # does carry state, so allow small leakage but require strong damping
+    d_last = float(jnp.max(jnp.abs(l1[0, -1] - l2[0, -1])))
+    d_first = float(jnp.max(jnp.abs(l1[0, 1] - l2[0, 1])))
+    assert d_first > 0
+    assert d_last < d_first
+
+
+def test_moe_capacity_drops_gracefully(rng):
+    cfg = get_config("arctic-480b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    logits, _, aux = tf.forward_full(cfg, params, _inputs(cfg, rng))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert float(aux) > 0          # router is exercised
+
+
+def test_param_counts_match_analytic():
+    """ParamSpec trees must agree with the analytic count (used for
+    MODEL_FLOPS in the roofline) to within 1.5%."""
+    from repro.models.common import param_count
+    for arch in ARCHES:
+        cfg = get_config(arch)
+        analytic = cfg.param_count()
+        tree = param_count(tf.model_specs(cfg))
+        assert abs(tree - analytic) / analytic < 0.015, \
+            (arch, tree, analytic)

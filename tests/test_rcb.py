@@ -1,0 +1,79 @@
+"""RCB binary format: control really is data (roundtrip + integrity)."""
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rcb import Op, RCB, RCBOp, RCBProgram, TensorDesc
+
+
+def _prog(ops, tensors=None):
+    tensors = tensors or {}
+    return RCBProgram("t", tensors, [RCB(0, "layer", (), tuple(ops))])
+
+
+def test_rcb_roundtrip_simple():
+    ops = (RCBOp(Op.GEMM, ("y",), ("a", "b"), {"ta": False}),
+           RCBOp(Op.FENCE),
+           RCBOp(Op.HALT))
+    blk = RCB(7, "layer", (3,), ops)
+    blob = blk.encode()
+    back, consumed = RCB.decode(memoryview(blob))
+    assert consumed == len(blob)
+    assert back == blk
+
+
+def test_rcb_crc_detects_tamper():
+    blk = RCB(1, "layer", (), (RCBOp(Op.RELU, ("y",), ("x",)),))
+    blob = bytearray(blk.encode())
+    blob[25] ^= 0xFF
+    with pytest.raises(ValueError, match="CRC"):
+        RCB.decode(memoryview(bytes(blob)))
+
+
+def test_program_roundtrip_and_validate():
+    tensors = {
+        "x": TensorDesc("x", (4, 4), "float32", "input", ("batch", None)),
+        "w": TensorDesc("w", (4, 4), "float32", "weight"),
+        "y": TensorDesc("y", (4, 4), "float32", "output"),
+    }
+    prog = RCBProgram("mm", tensors,
+                      [RCB(0, "layer", (),
+                           (RCBOp(Op.GEMM, ("y",), ("x", "w")),))])
+    prog.validate()
+    back = RCBProgram.decode(prog.encode())
+    assert back.name == "mm"
+    assert back.tensors["x"].axes == ("batch", None)
+    assert back.blocks[0].ops[0].op == Op.GEMM
+
+
+def test_validate_catches_unbound_symbol():
+    prog = _prog([RCBOp(Op.RELU, ("y",), ("nope",))])
+    with pytest.raises(ValueError, match="unbound"):
+        prog.validate()
+
+
+def test_validate_catches_missing_dep():
+    prog = RCBProgram("t", {}, [RCB(0, "layer", (99,), (RCBOp(Op.FENCE),))])
+    with pytest.raises(ValueError, match="missing dep"):
+        prog.validate()
+
+
+_sym = st.text(alphabet="abcdefgh_0123456789", min_size=1, max_size=8)
+_attr_val = st.one_of(st.integers(-1000, 1000), st.booleans(),
+                      st.floats(-1e3, 1e3, allow_nan=False),
+                      st.lists(st.integers(0, 64), max_size=4))
+
+
+@given(st.lists(
+    st.builds(RCBOp,
+              st.sampled_from(list(Op)),
+              st.lists(_sym, max_size=3).map(tuple),
+              st.lists(_sym, max_size=3).map(tuple),
+              st.dictionaries(_sym, _attr_val, max_size=4)),
+    max_size=16))
+@settings(max_examples=50, deadline=None)
+def test_property_block_roundtrip(ops):
+    blk = RCB(3, "pipeline", (0, 1), tuple(ops))
+    back, _ = RCB.decode(memoryview(blk.encode()))
+    assert back == blk

@@ -1,0 +1,82 @@
+"""RTPM: event dispatch, heartbeats/stragglers, telemetry CV, provisioning."""
+import numpy as np
+
+from repro.core import rctc, rimfs
+from repro.core.executor import Executor
+from repro.core.rtpm import EventDispatcher, HeartbeatMonitor, Platform, \
+    Telemetry
+
+
+def test_event_dispatch_fanout():
+    d = EventDispatcher()
+    seen = []
+    d.register("x", lambda p: seen.append(("a", p["v"])))
+    d.register("x", lambda p: seen.append(("b", p["v"])))
+    d.post("x", {"v": 1})
+    d.post("y", {})
+    assert d.process() == 2
+    assert seen == [("a", 1), ("b", 1)]
+    assert d.dropped == 1                     # unhandled "y"
+
+
+def test_heartbeat_failure_and_straggler():
+    t = [0.0]
+    mon = HeartbeatMonitor(deadline=10.0, straggler_factor=2.0,
+                           clock=lambda: t[0])
+    for w in ("w0", "w1", "w2"):
+        mon.beat(w, step=10)
+    t[0] = 6.0
+    mon.beat("w0", step=11)                    # w1/w2 now 6s stale (> 10/2)
+    v = mon.check()
+    assert set(v["stragglers"]) == {"w1", "w2"}
+    assert v["failed"] == []
+    t[0] = 17.0                                # w1/w2 now 17s stale (> 10)
+    mon.beat("w0", step=12)                    # w0 stays healthy
+    v = mon.check()
+    assert set(v["failed"]) == {"w1", "w2"}
+    # dead workers stay dead
+    assert mon.check()["failed"] == []
+
+
+def test_step_lag_marks_straggler():
+    t = [0.0]
+    mon = HeartbeatMonitor(deadline=100.0, clock=lambda: t[0])
+    mon.beat("fast1", step=50)
+    mon.beat("fast2", step=51)
+    mon.beat("slow", step=10)
+    v = mon.check()
+    assert "slow" in v["stragglers"]
+
+
+def test_telemetry_cv():
+    tel = Telemetry()
+    rng = np.random.RandomState(0)
+    for _ in range(1000):
+        tel.record_latency(1e-3 + rng.randn() * 1e-6)
+    s = tel.summary(warmup=10)
+    assert s["n"] == 990
+    assert s["cv_percent"] < 1.0
+    assert s["p99"] >= s["p50"] >= s["min"]
+
+
+def test_platform_provision_bind_run(rng):
+    """The paper's 4-phase flow end to end through the Platform."""
+    prog = rctc.compile_matmul(16)
+    img = rimfs.pack({"b": rng.randn(16, 16).astype(np.float32)})
+    plat = Platform()
+    plat.provision(image=img, program_bytes=prog.encode())
+    assert plat.time_to_service() >= 0
+    bound = plat.bind(inputs={"a": rng.randn(16, 16).astype(np.float32)})
+    ex = Executor(rtpm=plat)
+    out = ex.run(bound)
+    assert out["output"].shape == (16, 16)
+
+
+def test_platform_rejects_corrupt_image(rng):
+    import pytest
+
+    from repro.core.rimfs import RIMFSError
+    img = bytearray(rimfs.pack({"w": rng.randn(8).astype(np.float32)}))
+    img[-2] ^= 0xFF
+    with pytest.raises(RIMFSError):
+        Platform().provision(image=bytes(img))

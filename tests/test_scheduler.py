@@ -1,0 +1,43 @@
+"""Deadline scheduler: EDF ordering, shedding, latency-estimate tracking."""
+from repro.serving.scheduler import DeadlineScheduler, ScheduledRequest
+
+
+def _sched(est=0.01, t0=0.0):
+    clock = {"t": t0}
+    s = DeadlineScheduler(step_latency_estimate=est,
+                          clock=lambda: clock["t"])
+    return s, clock
+
+
+def test_priority_then_edf_order():
+    s, _ = _sched()
+    s.submit(ScheduledRequest(1, tokens_needed=4, priority=2, deadline=1.0))
+    s.submit(ScheduledRequest(2, tokens_needed=4, priority=1, deadline=9.0))
+    s.submit(ScheduledRequest(3, tokens_needed=4, priority=1, deadline=0.5))
+    admitted = s.admit(free_slots=3)
+    assert [r.rid for r in admitted] == [3, 2, 1]
+
+
+def test_infeasible_deadline_is_shed():
+    s, clock = _sched(est=0.1)
+    clock["t"] = 10.0
+    s.submit(ScheduledRequest(1, tokens_needed=100, deadline=10.5))  # needs 10s
+    s.submit(ScheduledRequest(2, tokens_needed=2, deadline=11.0))
+    admitted = s.admit(free_slots=2)
+    assert [r.rid for r in admitted] == [2]
+    assert s.shed_count == 1
+
+
+def test_no_deadline_always_feasible():
+    s, _ = _sched()
+    for i in range(5):
+        s.submit(ScheduledRequest(i, tokens_needed=1000))
+    assert len(s.admit(3)) == 3
+    assert s.pending() == 2
+
+
+def test_latency_ewma_moves_estimate():
+    s, _ = _sched(est=0.01)
+    for _ in range(50):
+        s.observe_step_latency(0.05)
+    assert abs(s.est - 0.05) < 5e-3

@@ -1,0 +1,78 @@
+"""End-to-end behaviour of the paper's system: the full Provision -> Bind ->
+Dispatch -> Sync cycle, eager-vs-fused latency determinism, and the
+block-size overhead regime (qualitative versions of Tables 1 and 3)."""
+import time
+
+import numpy as np
+
+from repro.core import rbl, rctc, rimfs
+from repro.core.executor import Executor
+from repro.core.rtpm import Platform
+
+
+def test_four_phase_execution_flow(rng):
+    """Provision (RIMFS+RCBs) -> Bind (RBL) -> Dispatch (RHAL) -> Sync."""
+    prog = rctc.compile_conv_relu_softmax()
+    w = rng.randn(3, 3, 3, 9).astype(np.float32)
+    plat = Platform()
+    plat.provision(image=rimfs.pack({"w_conv": w}),
+                   program_bytes=prog.encode())
+    x = rng.randn(1, 8, 8, 3).astype(np.float32)
+    bound = plat.bind(inputs={"input": x})
+    ex = Executor(rtpm=plat)
+    out = ex.run(bound)
+    plat.events.process()
+    assert out["output"].shape == (1, 9)
+    assert np.isclose(float(np.sum(out["output"])), 1.0, atol=1e-5)
+
+
+def test_fused_mean_latency_below_eager(rng):
+    """Paper Table 3 mechanism: the single-dispatch path is faster than the
+    op-at-a-time path on the same RCB program."""
+    prog = rctc.compile_matmul(64)
+    a = rng.randn(64, 64).astype(np.float32)
+    b = rng.randn(64, 64).astype(np.float32)
+    fs = rimfs.mount(rimfs.pack({"b": b}))
+    ex = Executor()
+
+    bound = rbl.bind(prog, rimfs=fs, inputs={"a": a})
+    eager_lat = []
+    for _ in range(60):
+        t0 = time.perf_counter()
+        ex.run(bound)
+        eager_lat.append(time.perf_counter() - t0)
+
+    bound2 = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound2)
+    w = ex.weights_from(bound2)
+    fused({"a": a}, w)["output"].block_until_ready()    # compile
+    fused_lat = []
+    for _ in range(60):
+        t0 = time.perf_counter()
+        fused({"a": a}, w)["output"].block_until_ready()
+        fused_lat.append(time.perf_counter() - t0)
+
+    e_mu = float(np.mean(eager_lat[10:]))
+    f_mu = float(np.mean(fused_lat[10:]))
+    assert f_mu < e_mu, (e_mu, f_mu)
+
+
+def test_per_transfer_overhead_shrinks_with_block_size(rng):
+    """Paper Table 1 regime: per-byte cost of many small PASSTHROUGH
+    transfers exceeds that of few large ones (fixed per-op cost)."""
+    total = 1 << 20                                  # 1 MB total
+
+    def per_byte_cost(block):
+        n = total // block
+        prog = rctc.compile_passthrough((block,))
+        bound = rbl.bind(prog, inputs={})
+        ex = Executor()
+        x = rng.randn(block).astype(np.float32)
+        t0 = time.perf_counter()
+        for _ in range(n):
+            ex.run(bound, inputs={"input": x})
+        return (time.perf_counter() - t0) / total
+
+    small = per_byte_cost(256)
+    large = per_byte_cost(64 * 1024)
+    assert small > 2.0 * large, (small, large)
