@@ -1,16 +1,22 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows. "eager" is the OS-mediated
-analogue (per-op dispatch + host sync, like Vitis AI's kernel-crossing
-path); "fused" is the baremetal analogue (one XLA program per RCB stream).
-The paper reports ratios, not absolutes (§5.1) — the derived column carries
-the ratio each table is about.
+Prints ``name,us_per_call,derived`` CSV rows. "eager"/"interpreted" is the
+OS-mediated analogue (per-op decode + dispatch + host sync, like Vitis AI's
+kernel-crossing path); "linked" is the compiled dispatch path (pre-resolved
+thunks, core/linker.py); "fused" is the baremetal analogue (one XLA program
+per RCB stream). The paper reports ratios, not absolutes (§5.1) — the
+derived column carries the ratio each table is about.
+
+Alongside the CSV, every row lands in ``BENCH_core.json``
+(name -> {us_per_call, derived}) so the perf trajectory is machine-checkable
+across PRs.
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import pickle
 import statistics
 import time
@@ -20,18 +26,21 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import rbl, rctc, rimfs
+from repro.core import opt, rbl, rctc, rimfs
 from repro.core.executor import Executor
-from repro.core.rcb import Op
+from repro.core.rcb import Op, RCBProgram
 from repro.core.rtpm import Platform
 from repro.models import resnet as rn
 
 ROWS: list[str] = []
+RESULTS: dict[str, dict] = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.2f},{derived}"
     ROWS.append(row)
+    RESULTS[name] = {"us_per_call": round(us_per_call, 2),
+                     "derived": derived}
     print(row)
 
 
@@ -74,7 +83,7 @@ def table1_transfer_overhead(total_mb: float = 2.0) -> None:
 
         def eager():
             for i in range(n):
-                ex.run(bound, inputs={"input": xs[f"in{i}"]})
+                ex.run_interpreted(bound, inputs={"input": xs[f"in{i}"]})
 
         # control-as-data lets the runtime flatten the n-transfer stream
         # into ONE descriptor (paper §5.3: fusion/buffering/batching):
@@ -129,7 +138,7 @@ def table45_kernel_breakdowns(rng=None) -> None:
     fused = ex.fuse(bound2)
     w = ex.weights_from(bound2)
     t_f = min(_time(lambda: jax.block_until_ready(fused({"a": a}, w)), 30))
-    t_e = min(_time(lambda: ex.run(bound), 30))
+    t_e = min(_time(lambda: ex.run_interpreted(bound), 30))
     # fused movement cost = (with-DMA fused) - (no-DMA fused): the compute
     # is identical, the difference is the streamed transfer cost
     prog0 = rctc.compile_matmul(64, with_dma=False)
@@ -150,7 +159,7 @@ def table45_kernel_breakdowns(rng=None) -> None:
 
     def p_eager():
         for i in range(n):
-            ex.run(bp, inputs={"input": xs[f"in{i}"]})
+            ex.run_interpreted(bp, inputs={"input": xs[f"in{i}"]})
 
     stacked = np.stack([xs[f"in{i}"] for i in range(n)])
     sp = rctc.compile_passthrough((n, floats))
@@ -228,7 +237,7 @@ def table3_resnet_inference(rng=None, iters: int = 200) -> None:
     x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
 
     bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
-    lat_e = _time(lambda: ex.run(bound), iters, warmup=10)
+    lat_e = _time(lambda: ex.run_interpreted(bound), iters, warmup=10)
 
     bound2 = rbl.bind(prog, rimfs=fs)
     fused = ex.fuse(bound2)
@@ -271,17 +280,98 @@ def kernel_microbench(rng=None) -> None:
     emit("kernels/int8_matmul_interpret", t * 1e6, "vs ref in tests")
 
 
+# ---------------------------------------------------------------------------
+# Core dispatch spine: linked vs interpreted, v1 vs v2 wire, peephole pass
+# ---------------------------------------------------------------------------
+
+def core_dispatch_bench(rng=None, iters: int = 30) -> None:
+    """The two hottest runtime fixed costs, before/after this PR's compiled
+    path: per-op dispatch (interpreted decode loop vs linked thunks) and
+    program load (JSON-v1 vs packed-v2 decode)."""
+    rng = rng or np.random.RandomState(0)
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    folded = rn.fold_bn(params)
+    raw, image = rctc.compile_resnet18(cfg, folded, batch=1,
+                                       optimize=False)
+    optd, _ = rctc.compile_resnet18(cfg, folded, batch=1, optimize=True)
+    fs = rimfs.mount(image)
+    x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
+    ex = Executor()
+    n_ops = opt.op_count(raw)
+
+    # --- dispatch: interpreted baseline vs linked thunk loop (same program)
+    bound_i = rbl.bind(raw, rimfs=fs, inputs={"input": x})
+    bound_l = rbl.bind(raw, rimfs=fs, inputs={"input": x})
+    t_int = min(_time(lambda: ex.run_interpreted(bound_i), iters))
+    t_lnk = min(_time(lambda: jax.block_until_ready(
+        ex.run(bound_l)["output"]), iters))
+    ops_int, ops_lnk = n_ops / t_int, n_ops / t_lnk
+    emit("core/dispatch_interpreted_resnet18", t_int * 1e6,
+         f"ops_per_sec={ops_int:.0f}")
+    emit("core/dispatch_linked_resnet18", t_lnk * 1e6,
+         f"ops_per_sec={ops_lnk:.0f}; speedup={ops_lnk/ops_int:.2f}x "
+         f"vs interpreted (target >= 2x)")
+
+    # --- bit-identical equivalence across all three modes + peephole
+    o_int = np.asarray(ex.run_interpreted(bound_i)["output"])
+    o_lnk = np.asarray(jax.block_until_ready(ex.run(bound_l)["output"]))
+    bound_o = rbl.bind(optd, rimfs=fs, inputs={"input": x})
+    o_opt = np.asarray(jax.block_until_ready(ex.run(bound_o)["output"]))
+    bound_f = rbl.bind(optd, rimfs=fs)
+    fused = ex.fuse(bound_f)
+    o_fus = np.asarray(jax.block_until_ready(
+        fused({"input": x}, ex.weights_from(bound_f))["output"]))
+    identical = (np.array_equal(o_int, o_lnk)
+                 and np.array_equal(o_lnk, o_opt)
+                 and np.array_equal(o_lnk, o_fus))
+    n_opt = opt.op_count(optd)
+    emit("core/peephole_resnet18_opcount", 0.0,
+         f"raw={n_ops} optimized={n_opt} "
+         f"reduction={(n_ops - n_opt) / n_ops:.1%} (target >= 15%); "
+         f"bit_identical={identical} (interpreted/linked/fused)")
+
+    # --- wire format: v1 (per-op JSON) vs v2 (interned symtab + packed)
+    cfg_f = __import__("repro.configs.resnet18", fromlist=["CONFIG"]).CONFIG
+    params_f = rn.init_resnet(jax.random.PRNGKey(0), cfg_f)
+    prog_f, _ = rctc.compile_resnet18(cfg_f, rn.fold_bn(params_f), batch=1,
+                                      optimize=False)
+    b1 = prog_f.encode(version=1)
+    b2 = prog_f.encode(version=2)
+    assert RCBProgram.decode(b1).blocks == RCBProgram.decode(b2).blocks
+    reps = 200
+    te1 = min(_time(lambda: prog_f.encode(version=1), reps))
+    te2 = min(_time(lambda: prog_f.encode(version=2), reps))
+    td1 = min(_time(lambda: RCBProgram.decode(b1), reps))
+    td2 = min(_time(lambda: RCBProgram.decode(b2), reps))
+    emit("core/encode_v1", te1 * 1e6,
+         f"{len(b1)/te1/1e6:.1f}MB/s size={len(b1)}B")
+    emit("core/encode_v2", te2 * 1e6,
+         f"{len(b2)/te2/1e6:.1f}MB/s size={len(b2)}B; "
+         f"speedup={te1/te2:.2f}x vs v1")
+    emit("core/decode_v1", td1 * 1e6, f"{len(b1)/td1/1e6:.1f}MB/s")
+    emit("core/decode_v2", td2 * 1e6,
+         f"{len(b2)/td2/1e6:.1f}MB/s; speedup={td1/td2:.2f}x vs v1 "
+         f"(target >= 3x)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default="BENCH_core.json",
+                    help="machine-readable results path")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    core_dispatch_bench(iters=10 if args.quick else 30)
     table1_transfer_overhead(total_mb=1.0 if args.quick else 4.0)
     table45_kernel_breakdowns()
     table2_resource_utilization()
     table3_resnet_inference(iters=50 if args.quick else 200)
     kernel_microbench()
-    print(f"# {len(ROWS)} rows")
+    with open(args.json, "w") as f:
+        json.dump(RESULTS, f, indent=2, sort_keys=True)
+    print(f"# {len(ROWS)} rows -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,26 @@
 """The generic RCB executor — cyclic Fetch-Decode-Dispatch.
 
 The executor knows nothing about models: it walks the linear op stream and
-invokes RHAL vtable slots. Two modes reproduce the paper's central
+invokes RHAL vtable slots. Three modes reproduce the paper's central
 comparison on TPU terms:
 
-  * ``eager``  — every op is dispatched as its own device computation with a
-    host synchronization after it (per-op fixed cost: the OS-mediated /
-    Vitis-AI analogue). Per-op wall times are recorded for the benchmark
-    harness.
-  * ``fused``  — the *same* program and the *same* dispatch loop run once
-    under ``jax.jit`` via the trace driver, collapsing the whole RCB stream
-    into one XLA executable (the baremetal analogue: one dispatch per step,
-    zero host round-trips inside).
+  * ``interpreted`` — every op is re-decoded through the opcode switch and
+    dispatched as its own device computation with a host synchronization
+    after it (per-op fixed cost: the OS-mediated / Vitis-AI analogue).
+    Per-op wall times are recordable, so this is also the measurement mode.
+  * ``linked``  — the default ``run`` path. The program is linked ONCE
+    (core/linker.py) into pre-resolved thunks over a dense slot array; the
+    dispatch loop is ``for thunk in thunks: thunk(slots, rimfs)`` with
+    per-site jitted handlers dispatching asynchronously, syncing only at
+    FENCE ops and program exit.
+  * ``fused``  — the *same* linked thunks run once under ``jax.jit`` via
+    the trace driver, collapsing the whole RCB stream into one XLA
+    executable (the baremetal analogue: one dispatch per step, zero host
+    round-trips inside).
 
-Equivalence of the two modes over the whole op vocabulary is enforced by
-tests/test_executor.py — the paper's "same RCBs drive different execution
-environments" portability property.
+Equivalence of the modes over the whole op vocabulary is enforced by
+tests/test_executor.py and tests/test_linker.py — the paper's "same RCBs
+drive different execution environments" portability property.
 """
 from __future__ import annotations
 
@@ -24,8 +29,10 @@ import time
 from typing import Any, Callable, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import linker as linker_mod
 from repro.core import rhal as rhal_mod
 from repro.core.rbl import BoundProgram
 from repro.core.rcb import Op, RCBProgram
@@ -38,6 +45,20 @@ class OpTrace:
     seconds: float
 
 
+def _probe_update(probe_dev: dict, sym: str, buf) -> None:
+    """Device-side abs-max accumulation: no host round-trip per op (the
+    old path forced ``np.asarray`` — a full host sync per dispatch)."""
+    m = jnp.max(jnp.abs(buf))
+    prev = probe_dev.get(sym)
+    probe_dev[sym] = m if prev is None else jnp.maximum(prev, m)
+
+
+def _probe_flush(probe: dict, probe_dev: dict) -> None:
+    """Convert accumulated device scalars to host floats ONCE at exit."""
+    for sym, m in probe_dev.items():
+        probe[sym] = max(probe.get(sym, 0.0), float(m))
+
+
 class Executor:
     def __init__(self, driver: Optional[rhal_mod.HalDriver] = None,
                  rtpm=None):
@@ -45,10 +66,20 @@ class Executor:
         self.rtpm = rtpm
         self.op_traces: list[OpTrace] = []
 
+    # ------------------------------------------------------------- linking
+    def link(self, bound: BoundProgram) -> linker_mod.LinkedProgram:
+        """Link (and cache on the BoundProgram) against this driver."""
+        linked = getattr(bound, "_linked", None)
+        if linked is None or linked.driver is not self.driver \
+                or linked.program is not bound.program:
+            linked = linker_mod.link(bound, self.driver)
+            bound._linked = linked
+        return linked
+
     # ------------------------------------------------------------ dispatch
     def _dispatch(self, driver, op, buffers, free_after: Optional[dict],
                   idx: int, rimfs):
-        """Decode + dispatch one RCBOp through the vtable."""
+        """Decode + dispatch one RCBOp through the vtable (interpreted)."""
         if op.op == Op.NOP or op.op == Op.HALT:
             return
         if op.op == Op.ALLOC:
@@ -91,13 +122,18 @@ class Executor:
             srcs = [buffers[s] for s in op.srcs]
             buffers[op.dsts[0]] = driver.dispatch_compute(op.op, srcs,
                                                           op.attrs)
-        # buffer lifetime management (RBL liveness plan)
+        # Buffer lifetime management (RBL liveness plan). Scratch is
+        # released by reference-drop, not driver.free: eager identity ops
+        # (PASSTHROUGH, single-device COLLECTIVE) alias their source, so an
+        # eager delete would tear buffers still reachable under another
+        # symbol. The linked path applies the same policy via its
+        # precomputed free-lists.
         if free_after is not None:
             for s in op.srcs:
                 if free_after.get(s) == idx:
                     t = self._prog.tensors.get(s)
                     if t is not None and t.kind == "scratch":
-                        driver.free(buffers.pop(s, None))
+                        buffers.pop(s, None)
 
     def _artifact(self, name: str) -> Callable:
         fn = self._prog.artifacts.get(name)
@@ -109,10 +145,74 @@ class Executor:
     def run(self, bound: BoundProgram, inputs: Optional[dict] = None,
             rimfs=None, trace_ops: bool = False,
             probe: Optional[dict] = None) -> dict:
-        """Interpret the program op-by-op (eager / OS-mediated analogue).
+        """Execute the program through the linked (compiled-dispatch) path.
 
         ``probe``: optional dict filled with per-symbol abs-max of every
-        produced buffer — used by INT8 calibration (core/quant.py).
+        produced buffer — used by INT8 calibration (core/quant.py). The
+        abs-max accumulates on device; host conversion happens once.
+
+        ``trace_ops=True`` falls back to the interpreted path: per-op wall
+        timing needs the per-op host sync that defines that mode.
+        """
+        if trace_ops:
+            return self.run_interpreted(bound, inputs=inputs, rimfs=rimfs,
+                                        trace_ops=True, probe=probe)
+        linked = self.link(bound)
+        slots = linked.fresh_slots(bound.buffers, inputs)
+        for sym, i in linked.missing_inputs:
+            if slots[i] is None:
+                raise ValueError(f"missing input {sym!r}")
+        probe_dev: Optional[dict] = None
+        if probe is not None:
+            probe_dev = {}
+            for i, buf in enumerate(slots):
+                if buf is not None:
+                    _probe_update(probe_dev, linked.names[i], buf)
+        if probe_dev is None and self.rtpm is None:
+            for thunk in linked.thunks:            # THE hot loop
+                thunk(slots, rimfs)
+        else:                                      # instrumented (composable)
+            thunks = linked.thunks
+            metas = linked.metas
+            for block_id, start, end in linked.block_spans:
+                t_blk = time.perf_counter()
+                for k in range(start, end):
+                    thunks[k](slots, rimfs)
+                    if probe_dev is not None:
+                        for d in metas[k].dst_slots:
+                            if slots[d] is not None:
+                                _probe_update(probe_dev, linked.names[d],
+                                              slots[d])
+                if self.rtpm is not None:
+                    # sync the block's products so "seconds" reflects
+                    # execution, not async enqueue
+                    for k in range(start, end):
+                        for d in metas[k].dst_slots:
+                            buf = slots[d]
+                            if buf is not None and hasattr(
+                                    buf, "block_until_ready"):
+                                buf.block_until_ready()
+                    self.rtpm.post("rcb_complete",
+                                   {"block": block_id,
+                                    "seconds": time.perf_counter() - t_blk})
+        self.driver._count("dispatch", linked.n_compute)
+        if probe_dev is not None:
+            _probe_flush(probe, probe_dev)
+        out = {}
+        for name, i in linked.output_slots:
+            if slots[i] is not None:
+                out[name] = slots[i]
+        return out
+
+    # --------------------------------------------------- interpreted baseline
+    def run_interpreted(self, bound: BoundProgram,
+                        inputs: Optional[dict] = None, rimfs=None,
+                        trace_ops: bool = False,
+                        probe: Optional[dict] = None) -> dict:
+        """Interpret the program op-by-op (eager / OS-mediated analogue).
+
+        Kept as the baseline the benchmarks compare the linked path
+        against, and as the per-op measurement mode (``trace_ops``).
         """
         self._prog = bound.program
         buffers = dict(bound.buffers)
@@ -121,10 +221,11 @@ class Executor:
         for sym in bound.missing_inputs:
             if sym not in buffers:
                 raise ValueError(f"missing input {sym!r}")
+        probe_dev: Optional[dict] = None
         if probe is not None:
+            probe_dev = {}
             for sym, buf in buffers.items():
-                probe[sym] = max(probe.get(sym, 0.0),
-                                 float(np.max(np.abs(np.asarray(buf)))))
+                _probe_update(probe_dev, sym, buf)
         idx = 0
         for block in bound.program.blocks:
             t_blk = time.perf_counter()
@@ -136,17 +237,17 @@ class Executor:
                     self.op_traces.append(
                         OpTrace(block.block_id, op.op,
                                 time.perf_counter() - t0))
-                if probe is not None:
+                if probe_dev is not None:
                     for dd in op.dsts:
                         if dd in buffers:
-                            probe[dd] = max(
-                                probe.get(dd, 0.0),
-                                float(np.max(np.abs(np.asarray(buffers[dd])))))
+                            _probe_update(probe_dev, dd, buffers[dd])
                 idx += 1
             if self.rtpm is not None:
                 self.rtpm.post("rcb_complete",
                                {"block": block.block_id,
                                 "seconds": time.perf_counter() - t_blk})
+        if probe_dev is not None:
+            _probe_flush(probe, probe_dev)
         return {name: buffers[name]
                 for name, t in bound.program.tensors.items()
                 if t.kind == "output" and name in buffers}
@@ -156,29 +257,29 @@ class Executor:
         """Stage the whole program into one jitted callable.
 
         Returns ``fn(inputs: dict, weights: dict) -> outputs: dict`` — a
-        single XLA program per RCB stream (the baremetal analogue).
+        single XLA program per RCB stream (the baremetal analogue). The
+        staged function traces the SAME linked thunk form ``run`` executes,
+        just through the trace driver.
         """
         self._prog = bound.program
-        prog = bound.program
-        weight_names = sorted(n for n, t in prog.tensors.items()
-                              if t.kind == "weight")
-        input_names = sorted(n for n, t in prog.tensors.items()
-                             if t.kind == "input")
         trace_driver = rhal_mod.make_trace_driver()
+        linked = linker_mod.link(bound, trace_driver)
+        weight_slots = linked.weight_slots
+        input_slots = linked.input_slots
+        thunks = linked.thunks
+        output_slots = linked.output_slots
+        n_slots = linked.n_slots
 
         def staged(inputs: dict, weights: dict) -> dict:
-            buffers = {}
-            buffers.update({k: weights[k] for k in weight_names})
-            buffers.update({k: inputs[k] for k in input_names})
-            idx = 0
-            for block in prog.blocks:
-                for op in block.ops:
-                    self._dispatch(trace_driver, op, buffers, None, idx,
-                                   None)
-                    idx += 1
-            return {name: buffers[name]
-                    for name, t in prog.tensors.items()
-                    if t.kind == "output" and name in buffers}
+            slots: list = [None] * n_slots
+            for k, i in weight_slots.items():
+                slots[i] = weights[k]
+            for k, i in input_slots.items():
+                slots[i] = inputs[k]
+            for thunk in thunks:
+                thunk(slots, None)
+            return {name: slots[i] for name, i in output_slots
+                    if slots[i] is not None}
 
         donate = (1,) if donate_weights else ()
         return jax.jit(staged, donate_argnums=donate)

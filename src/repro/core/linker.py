@@ -1,0 +1,267 @@
+"""Program linker — the compiled RCB dispatch path.
+
+The interpreted executor re-decodes every op on every step: a ~15-branch
+if/elif chain, symbolic dict lookups for each operand, a liveness probe per
+source — per-op fixed costs of exactly the kind the paper's control-as-data
+design eliminates.  The linker pays all of them ONCE, at bind time:
+
+  * every symbolic tensor ref resolves to an index into a dense slot array
+    (no dict probes in the hot loop);
+  * every opcode resolves to a pre-specialized handler through the RHAL
+    ``link_compute`` vtable slot (for the eager driver: a per-site jitted
+    executable dispatched asynchronously — XLA's cached fast path);
+  * every scratch release point is baked in as a precomputed free-list
+    (tuple of slot indices cleared right after the op that last reads them).
+
+The result is a ``LinkedProgram`` whose execution is a tight
+``for thunk in thunks: thunk(slots, rimfs)`` loop — see Executor.run — and
+whose thunks are equally traceable under ``jax.jit`` (Executor.fuse stages
+the same linked form through the trace driver).  DESIGN.md §4 has the full
+contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from repro.core import rbl as rbl_mod
+from repro.core.rcb import Op, RCBProgram
+
+
+@dataclasses.dataclass(frozen=True)
+class ThunkMeta:
+    """Side-table entry describing one thunk (tracing / probing only —
+    the hot loop never reads this)."""
+    block_id: int
+    op: Op
+    dst_slots: tuple
+    dst_names: tuple
+
+
+@dataclasses.dataclass
+class LinkedProgram:
+    """A BoundProgram lowered to positional, pre-resolved form."""
+    program: RCBProgram
+    driver: Any
+    slot_of: dict                  # symbol -> dense slot index
+    names: list                    # slot index -> symbol
+    thunks: list                   # thunk(slots, rimfs) -> None
+    metas: list                    # list[ThunkMeta], parallel to thunks
+    block_spans: list              # (block_id, thunk_start, thunk_end)
+    input_slots: dict              # input symbol -> slot
+    weight_slots: dict             # weight symbol -> slot
+    output_slots: tuple            # (symbol, slot) pairs
+    missing_inputs: tuple          # (symbol, slot) the caller must feed
+    free_lists: tuple              # per-thunk tuple of slot indices released
+    n_compute: int                 # compute dispatches (bulk stats update)
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.names)
+
+    def fresh_slots(self, buffers: dict,
+                    inputs: Optional[dict] = None) -> list:
+        """Dense buffer array for one execution."""
+        slots: list = [None] * len(self.names)
+        slot_of = self.slot_of
+        for sym, buf in buffers.items():
+            slots[slot_of[sym]] = buf
+        if inputs:
+            for sym, buf in inputs.items():
+                i = slot_of.get(sym)
+                if i is not None:
+                    slots[i] = buf
+        return slots
+
+
+def _mk_compute(handler: Callable, d: int, src_idx: tuple, frees: tuple):
+    """Compute thunk factory, arity-specialized for the hot loop."""
+    if len(src_idx) == 1:
+        (i0,) = src_idx
+
+        def thunk(slots, rimfs):
+            slots[d] = handler(slots[i0])
+            for f in frees:
+                slots[f] = None
+    elif len(src_idx) == 2:
+        i0, i1 = src_idx
+
+        def thunk(slots, rimfs):
+            slots[d] = handler(slots[i0], slots[i1])
+            for f in frees:
+                slots[f] = None
+    elif len(src_idx) == 3:
+        i0, i1, i2 = src_idx
+
+        def thunk(slots, rimfs):
+            slots[d] = handler(slots[i0], slots[i1], slots[i2])
+            for f in frees:
+                slots[f] = None
+    else:
+        def thunk(slots, rimfs):
+            slots[d] = handler(*[slots[i] for i in src_idx])
+            for f in frees:
+                slots[f] = None
+    return thunk
+
+
+def link(bound: rbl_mod.BoundProgram, driver,
+         artifacts: Optional[dict] = None) -> LinkedProgram:
+    """Lower a BoundProgram into a LinkedProgram against one driver.
+
+    Linking is pure resolution — no device work happens here (the eager
+    driver's per-site jits trace lazily on first execution).
+    """
+    prog = bound.program
+    names = list(prog.tensors.keys())
+    slot_of = {n: i for i, n in enumerate(names)}
+    frees_by_idx = rbl_mod.scratch_free_lists(prog, bound.last_use)
+    link_compute = driver.link_compute
+    artifacts = {**prog.artifacts, **(artifacts or {})}
+
+    thunks: list = []
+    metas: list = []
+    block_spans: list = []
+    n_compute = 0
+    free_lists: list = []
+    idx = 0                                        # linear op index
+    for block in prog.blocks:
+        start = len(thunks)
+        for op in block.ops:
+            kind = op.op
+            frees = tuple(slot_of[s] for s in frees_by_idx[idx])
+            idx += 1
+            if kind is Op.NOP or kind is Op.HALT:
+                continue                           # zero dispatch cost
+            dslots = tuple(slot_of[d] for d in op.dsts)
+            sslots = tuple(slot_of[s] for s in op.srcs)
+            attrs = op.attrs
+            if kind is Op.ALLOC:
+                shape = tuple(attrs["shape"])
+                dtype = attrs["dtype"]
+                alloc = driver.alloc
+                d = dslots[0]
+
+                def thunk(slots, rimfs, _a=alloc, _d=d, _sh=shape,
+                          _dt=dtype):
+                    slots[_d] = _a(_sh, _dt)
+            elif kind is Op.FREE:
+                free = driver.free
+                d = dslots[0]
+
+                def thunk(slots, rimfs, _f=free, _d=d):
+                    _f(slots[_d])
+                    slots[_d] = None
+            elif kind is Op.BIND_CONST:
+                bind_const = driver.bind_const
+                value = attrs["value"]
+                d = dslots[0]
+
+                def thunk(slots, rimfs, _b=bind_const, _d=d, _v=value):
+                    slots[_d] = _b(_v)
+            elif kind is Op.DMA_H2D:
+                initiate, wait = driver.initiate_dma, driver.wait_dma
+                d, s, sname = dslots[0], sslots[0], op.srcs[0]
+
+                def thunk(slots, rimfs, _i=initiate, _w=wait, _d=d, _s=s,
+                          _n=sname, _fr=frees):
+                    host = slots[_s]
+                    if host is None and rimfs is not None:
+                        host = rimfs.read(_n)
+                    slots[_d] = _w(_i(host, "h2d"))
+                    for f in _fr:
+                        slots[f] = None
+            elif kind is Op.DMA_D2H or kind is Op.DMA_D2D:
+                initiate, wait = driver.initiate_dma, driver.wait_dma
+                direction = "d2h" if kind is Op.DMA_D2H else "d2d"
+                d, s = dslots[0], sslots[0]
+
+                def thunk(slots, rimfs, _i=initiate, _w=wait, _d=d, _s=s,
+                          _dir=direction, _fr=frees):
+                    slots[_d] = _w(_i(slots[_s], _dir))
+                    for f in _fr:
+                        slots[f] = None
+            elif kind is Op.GRAPH_EXEC:
+                fn = artifacts.get(attrs["artifact"])
+                if fn is None:
+                    raise KeyError(
+                        f"GRAPH_EXEC artifact {attrs['artifact']!r} "
+                        f"not attached")
+                if len(dslots) == 1:
+                    d = dslots[0]
+
+                    def thunk(slots, rimfs, _f=fn, _d=d, _s=sslots,
+                              _fr=frees):
+                        slots[_d] = _f(*[slots[i] for i in _s])
+                        for f in _fr:
+                            slots[f] = None
+                else:
+                    def thunk(slots, rimfs, _f=fn, _ds=dslots, _s=sslots,
+                              _fr=frees):
+                        outs = _f(*[slots[i] for i in _s])
+                        for d, o in zip(_ds, outs):
+                            slots[d] = o
+                        for f in _fr:
+                            slots[f] = None
+            elif kind is Op.COLLECTIVE:
+                coll = driver.collective
+                ckind = attrs.get("kind", "all_reduce")
+                d, s = dslots[0], sslots[0]
+
+                def thunk(slots, rimfs, _c=coll, _k=ckind, _d=d, _s=s,
+                          _at=attrs, _fr=frees):
+                    slots[_d] = _c(_k, slots[_s], _at)
+                    for f in _fr:
+                        slots[f] = None
+            elif kind is Op.FENCE:
+                fence = driver.fence
+
+                def thunk(slots, rimfs, _f=fence):
+                    _f([b for b in slots if b is not None])
+            elif kind is Op.POLL:
+                poll = driver.poll
+                s = sslots[0] if sslots else None
+
+                def thunk(slots, rimfs, _p=poll, _s=s):
+                    _p(slots[_s] if _s is not None else None)
+            else:                                  # compute dispatch
+                if link_compute is not None:
+                    handler = link_compute(kind, attrs)
+                    # specialized handlers bypass dispatch_compute, so the
+                    # executor bulk-updates the driver's dispatch stat;
+                    # the fallback below counts itself per call
+                    n_compute += 1
+                else:
+                    dispatch = driver.dispatch_compute
+
+                    def handler(*srcs, _dc=dispatch, _k=kind, _at=attrs):
+                        return _dc(_k, list(srcs), _at)
+                thunk = _mk_compute(handler, dslots[0], sslots, frees)
+            if frees and kind in (Op.ALLOC, Op.FREE, Op.BIND_CONST,
+                                  Op.FENCE, Op.POLL):
+                # these thunks don't apply free-lists themselves, but a POLL
+                # can be a scratch symbol's last reader — chain the release
+                # so linked matches the interpreted liveness plan.  (NOP/
+                # HALT read nothing, so their frees are always empty.)
+                inner = thunk
+
+                def thunk(slots, rimfs, _i=inner, _fr=frees):
+                    _i(slots, rimfs)
+                    for f in _fr:
+                        slots[f] = None
+            thunks.append(thunk)
+            metas.append(ThunkMeta(block.block_id, kind, dslots, op.dsts))
+            free_lists.append(frees)
+        block_spans.append((block.block_id, start, len(thunks)))
+
+    input_slots = {n: slot_of[n] for n, t in prog.tensors.items()
+                   if t.kind == "input"}
+    weight_slots = {n: slot_of[n] for n, t in prog.tensors.items()
+                    if t.kind == "weight"}
+    output_slots = tuple((n, slot_of[n]) for n, t in prog.tensors.items()
+                         if t.kind == "output")
+    missing = tuple((n, slot_of[n]) for n in bound.missing_inputs)
+    return LinkedProgram(prog, driver, slot_of, names, thunks, metas,
+                         block_spans, input_slots, weight_slots,
+                         output_slots, missing, tuple(free_lists),
+                         n_compute)

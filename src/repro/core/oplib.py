@@ -86,6 +86,16 @@ def scale_shift(x, scale, shift, attrs=None):
     return x * scale + shift
 
 
+def scale_shift_relu(x, scale, shift, attrs=None):
+    """Fused SCALE_SHIFT+RELU vtable slot (core/opt.py peephole rule F1)."""
+    return jnp.maximum(x * scale + shift, 0)
+
+
+def add_relu(a, b, attrs=None):
+    """Fused ADD+RELU vtable slot (core/opt.py peephole rule F2)."""
+    return jnp.maximum(a + b, 0)
+
+
 def quantize(x, attrs):
     scale = attrs["scale"]
     return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -115,6 +125,9 @@ _TABLE: dict[Op, Callable] = {
     Op.MAXPOOL: lambda srcs, attrs: maxpool(srcs[0], attrs),
     Op.AVGPOOL_GLOBAL: lambda srcs, attrs: avgpool_global(srcs[0], attrs),
     Op.SCALE_SHIFT: lambda srcs, attrs: scale_shift(*srcs, attrs=attrs),
+    Op.SCALE_SHIFT_RELU: lambda srcs, attrs: scale_shift_relu(*srcs,
+                                                              attrs=attrs),
+    Op.ADD_RELU: lambda srcs, attrs: add_relu(srcs[0], srcs[1], attrs),
     Op.QUANTIZE: lambda srcs, attrs: quantize(srcs[0], attrs),
     Op.DEQUANT: lambda srcs, attrs: dequantize(srcs[0], attrs),
     Op.RESHAPE: lambda srcs, attrs: reshape(srcs[0], attrs),
@@ -128,3 +141,15 @@ def compute(op: Op, srcs, attrs):
     if fn is None:
         raise NotImplementedError(f"no semantics for {op!r}")
     return fn(srcs, attrs)
+
+
+def lookup(op: Op) -> Callable:
+    """Resolve one opcode to its handler ``fn(srcs, attrs)`` ahead of time.
+
+    The program linker (core/linker.py) calls this once per op at link time
+    so the hot dispatch loop never touches the table again.
+    """
+    fn = _TABLE.get(op)
+    if fn is None:
+        raise NotImplementedError(f"no semantics for {op!r}")
+    return fn

@@ -43,6 +43,23 @@ def liveness(program: RCBProgram) -> dict:
     return last
 
 
+def scratch_free_lists(program: RCBProgram,
+                       last_use: Optional[dict] = None) -> list:
+    """Per-linear-op-index tuples of scratch symbols whose last read is that
+    op — the precomputed release schedule the linker bakes into each thunk
+    (the interpreted path derives the same decisions from ``last_use`` one
+    dict probe per operand per step; linked pays nothing until the actual
+    release point)."""
+    last_use = liveness(program) if last_use is None else last_use
+    n_ops = sum(len(b.ops) for b in program.blocks)
+    frees: list[list] = [[] for _ in range(n_ops)]
+    for sym, idx in last_use.items():
+        t = program.tensors.get(sym)
+        if t is not None and t.kind == "scratch":
+            frees[idx].append(sym)
+    return [tuple(f) for f in frees]
+
+
 def resolve_shardings(program: RCBProgram) -> dict:
     out = {}
     for name, t in program.tensors.items():

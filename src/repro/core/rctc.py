@@ -13,6 +13,11 @@ Mirrors the paper's three toolchain functions:
   2. **Data packaging** — weights flatten into a RIMFS image (binary blob).
   3. **Mapping generation** — TensorDescs carry logical shapes/axes that the
      RBL resolves to physical buffers/shardings at load time.
+
+Before emission, translated programs run through the peephole pass
+(core/opt.py): fused SCALE_SHIFT_RELU / ADD_RELU slots, dead-scratch
+elimination, exact quantize round-trip elision and copy coalescing —
+``optimize=False`` emits the raw 1:1 translation (the benchmark baseline).
 """
 from __future__ import annotations
 
@@ -21,6 +26,7 @@ from typing import Any, Optional
 import numpy as np
 
 from repro.configs.resnet18 import ResNetConfig
+from repro.core import opt as opt_mod
 from repro.core import rimfs as rimfs_mod
 from repro.core.rcb import Op, RCB, RCBOp, RCBProgram, TensorDesc
 from repro.models import resnet as resnet_mod
@@ -162,12 +168,14 @@ def _emit_conv_bn_relu(b: _Builder, x, wname, scale, shift, out_shape,
 
 
 def compile_resnet18(cfg: ResNetConfig, folded: dict, batch: int = 1,
-                     int8: Optional[dict] = None):
+                     int8: Optional[dict] = None, optimize: bool = True):
     """Translate ResNet-18 into (RCBProgram, RIMFS image bytes).
 
     ``folded``: BN-folded weights from models/resnet.fold_bn.
     ``int8``: optional quantization pack from core/quant.quantize_resnet —
     {weights int8, requant scales, activation scales} (paper deploys INT8).
+    ``optimize``: run the core/opt.py peephole pass (bit-exact rules only)
+    before emission; False keeps the raw per-layer translation.
     """
     b = _Builder("resnet18_int8" if int8 else "resnet18")
     img = cfg.image_size
@@ -253,6 +261,8 @@ def compile_resnet18(cfg: ResNetConfig, folded: dict, batch: int = 1,
     b.emit(Op.SOFTMAX, ["output"], [t2])
     b.emit(Op.FENCE)
     prog = b.build()
+    if optimize:
+        prog = opt_mod.optimize(prog)
     image = rimfs_mod.pack(files)
     return prog, image
 

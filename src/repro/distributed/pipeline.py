@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.distributed.collectives import shard_map_compat
+
 
 def pipeline_forward(stage_fn, mesh, axis: str = "stage"):
     """Build fn(stage_params, microbatches) -> outputs.
@@ -29,10 +31,9 @@ def pipeline_forward(stage_fn, mesh, axis: str = "stage"):
     n_stage = mesh.shape[axis]
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map_compat, mesh=mesh,
         in_specs=(P(axis), P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())
     def run(stage_params, mbs):
         params_local = jax.tree.map(lambda a: a[0], stage_params)
         idx = jax.lax.axis_index(axis)

@@ -26,13 +26,14 @@ def test_compressed_psum_matches_exact():
     _run("""
     import jax, jax.numpy as jnp, numpy as np, functools
     from jax.sharding import Mesh, PartitionSpec as P
-    from repro.distributed.collectives import compressed_psum
+    from repro.distributed.collectives import compressed_psum, \
+        shard_map_compat
     mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
     g = jnp.asarray(np.random.RandomState(0).randn(8, 64), jnp.float32)
     exact = jnp.mean(g, axis=0)
     for method, tol in [("none", 1e-6), ("bf16", 2e-2), ("int8_ef", 3e-2)]:
-        @functools.partial(jax.shard_map, mesh=mesh, in_specs=P("data"),
-                           out_specs=P("data"), check_vma=False)
+        @functools.partial(shard_map_compat, mesh=mesh, in_specs=P("data"),
+                           out_specs=P("data"))
         def red(x, method=method):
             r, _ = compressed_psum(x[0], "data", method)
             return r[None]
@@ -49,13 +50,14 @@ def test_int8_error_feedback_converges():
     _run("""
     import jax, jax.numpy as jnp, numpy as np, functools
     from jax.sharding import Mesh, PartitionSpec as P
-    from repro.distributed.collectives import compressed_psum
+    from repro.distributed.collectives import compressed_psum, \
+        shard_map_compat
     mesh = Mesh(np.asarray(jax.devices()).reshape(8), ("data",))
     g = jnp.asarray(np.random.RandomState(1).randn(8, 32), jnp.float32)
     exact = jnp.mean(g, axis=0)
-    @functools.partial(jax.shard_map, mesh=mesh,
+    @functools.partial(shard_map_compat, mesh=mesh,
                        in_specs=(P("data"), P("data")),
-                       out_specs=(P("data"), P("data")), check_vma=False)
+                       out_specs=(P("data"), P("data")))
     def red(x, e):
         r, ne = compressed_psum(x[0], "data", "int8_ef", e[0])
         return r[None], ne[None]

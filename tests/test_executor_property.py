@@ -3,6 +3,9 @@ fused modes — the strongest form of the paper's portability claim (the same
 control stream drives both execution environments, for *any* program in the
 op vocabulary, not just hand-picked ones)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test dependency
 from hypothesis import given, settings, strategies as st
 
 from repro.core import rbl, rimfs

@@ -1,0 +1,322 @@
+"""Linked dispatch path: linked == interpreted == fused (bit-identical),
+scratch free-list correctness, and the core/opt.py peephole rules."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import linker, opt, rbl, rctc, rimfs
+from repro.core.executor import Executor
+from repro.core.rcb import Op, RCB, RCBOp, RCBProgram, TensorDesc
+
+
+def _vocab_program():
+    """Touch every dispatchable op family once, incl. the fused slots."""
+    t = {
+        "x": TensorDesc("x", (4, 8, 8, 3), "float32", "input"),
+        "w": TensorDesc("w", (3, 3, 3, 4), "float32", "weight"),
+        "scale": TensorDesc("scale", (4,), "float32", "weight"),
+        "shift": TensorDesc("shift", (4,), "float32", "weight"),
+        "fcw": TensorDesc("fcw", (4, 6), "float32", "weight"),
+        "fcb": TensorDesc("fcb", (6,), "float32", "weight"),
+        "t1": TensorDesc("t1", (4, 8, 8, 4), "float32", "scratch"),
+        "t2": TensorDesc("t2", (4, 8, 8, 4), "float32", "scratch"),
+        "t2b": TensorDesc("t2b", (4, 8, 8, 4), "float32", "scratch"),
+        "t3": TensorDesc("t3", (4, 4, 4, 4), "float32", "scratch"),
+        "t4": TensorDesc("t4", (4, 4), "float32", "scratch"),
+        "t4q": TensorDesc("t4q", (4, 4), "int8", "scratch"),
+        "t4d": TensorDesc("t4d", (4, 4), "float32", "scratch"),
+        "t4r": TensorDesc("t4r", (2, 8), "float32", "scratch"),
+        "t4c": TensorDesc("t4c", (2, 8), "float32", "scratch"),
+        "t4u": TensorDesc("t4u", (4, 4), "float32", "scratch"),
+        "zero": TensorDesc("zero", (1,), "float32", "scratch"),
+        "ta": TensorDesc("ta", (2, 2), "float32", "scratch"),
+        "t5": TensorDesc("t5", (4, 6), "float32", "scratch"),
+        "t6": TensorDesc("t6", (4, 6), "float32", "scratch"),
+        "out": TensorDesc("out", (4, 6), "float32", "output"),
+    }
+    ops = [
+        RCBOp(Op.NOP),
+        RCBOp(Op.ALLOC, ("ta",), (), {"shape": [2, 2],
+                                      "dtype": "float32"}),
+        RCBOp(Op.FREE, ("ta",)),
+        RCBOp(Op.BIND_CONST, ("zero",), (), {"value": [0.0]}),
+        RCBOp(Op.CONV2D, ("t1",), ("x", "w"), {"stride": [1, 1],
+                                               "padding": "SAME"}),
+        RCBOp(Op.SCALE_SHIFT_RELU, ("t2",), ("t1", "scale", "shift")),
+        RCBOp(Op.ADD_RELU, ("t2b",), ("t2", "t2")),
+        RCBOp(Op.MAXPOOL, ("t3",), ("t2b",), {"window": [2, 2],
+                                              "stride": [2, 2]}),
+        RCBOp(Op.AVGPOOL_GLOBAL, ("t4",), ("t3",)),
+        RCBOp(Op.QUANTIZE, ("t4q",), ("t4",), {"scale": 0.01}),
+        RCBOp(Op.DEQUANT, ("t4d",), ("t4q",), {"scale": 0.01}),
+        RCBOp(Op.RESHAPE, ("t4r",), ("t4d",), {"shape": [2, 8]}),
+        RCBOp(Op.COLLECTIVE, ("t4c",), ("t4r",), {"kind": "all_reduce"}),
+        RCBOp(Op.RESHAPE, ("t4u",), ("t4c",), {"shape": [4, 4]}),
+        RCBOp(Op.DENSE, ("t5",), ("t4u", "fcw", "fcb")),
+        RCBOp(Op.SOFTMAX, ("t6",), ("t5",)),
+        RCBOp(Op.PASSTHROUGH, ("out",), ("t6",)),
+        RCBOp(Op.POLL, (), ("out",)),
+        RCBOp(Op.FENCE),
+        RCBOp(Op.HALT),
+    ]
+    return RCBProgram("vocab", t, [RCB(0, "layer", (), tuple(ops))])
+
+
+def _weights(rng):
+    return {
+        "w": rng.randn(3, 3, 3, 4).astype(np.float32),
+        "scale": rng.rand(4).astype(np.float32) + 0.5,
+        "shift": rng.randn(4).astype(np.float32),
+        "fcw": rng.randn(4, 6).astype(np.float32),
+        "fcb": rng.randn(6).astype(np.float32),
+    }
+
+
+def test_linked_equals_interpreted_full_vocab(rng):
+    prog = _vocab_program()
+    fs = rimfs.mount(rimfs.pack(_weights(rng)))
+    x = rng.randn(4, 8, 8, 3).astype(np.float32)
+    ex = Executor()
+    bound_i = rbl.bind(prog, rimfs=fs, inputs={"x": x})
+    out_i = np.asarray(ex.run_interpreted(bound_i)["out"])
+    bound_l = rbl.bind(prog, rimfs=fs, inputs={"x": x})
+    out_l = np.asarray(jax.block_until_ready(ex.run(bound_l)["out"]))
+    np.testing.assert_array_equal(out_i, out_l)       # bit-identical
+
+
+def test_linked_equals_fused_full_vocab(rng):
+    prog = _vocab_program()
+    fs = rimfs.mount(rimfs.pack(_weights(rng)))
+    x = rng.randn(4, 8, 8, 3).astype(np.float32)
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs, inputs={"x": x})
+    out_l = np.asarray(jax.block_until_ready(ex.run(bound)["out"]))
+    bound2 = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound2)
+    out_f = np.asarray(fused({"x": x}, ex.weights_from(bound2))["out"])
+    np.testing.assert_array_equal(out_l, out_f)       # bit-identical
+
+
+def test_free_lists_match_liveness(rng):
+    prog = _vocab_program()
+    fs = rimfs.mount(rimfs.pack(_weights(rng)))
+    bound = rbl.bind(prog, rimfs=fs,
+                     inputs={"x": rng.randn(4, 8, 8, 3)
+                             .astype(np.float32)})
+    ex = Executor()
+    linked = ex.link(bound)
+    # every scratch symbol that is read appears in exactly one free list
+    released = [linked.names[i] for fl in linked.free_lists for i in fl]
+    assert len(released) == len(set(released))
+    read = {s for op in prog.ops() for s in op.srcs}
+    scratch_read = {n for n, t in prog.tensors.items()
+                    if t.kind == "scratch" and n in read}
+    assert set(released) == scratch_read
+    # and at the thunk of its LAST use, per the RBL liveness plan
+    last = rbl.liveness(prog)
+    thunk_ops = [m.op for m in linked.metas]
+    for k, fl in enumerate(linked.free_lists):
+        for i in fl:
+            sym = linked.names[i]
+            # find linear index of this thunk among the program ops
+            assert thunk_ops[k] is not None
+            # the symbol must be a source of the op this thunk executes
+            srcs_of_thunk = [op for op in prog.ops()
+                             if sym in op.srcs]
+            assert srcs_of_thunk, sym
+    # run to completion: all scratch released, outputs intact
+    out = ex.run(bound)
+    assert "out" in out
+
+
+def test_linked_missing_input_raises(rng):
+    prog = rctc.compile_matmul(8)
+    img = rimfs.pack({"b": rng.randn(8, 8).astype(np.float32)})
+    bound = rbl.bind(prog, rimfs=rimfs.mount(img))
+    with pytest.raises(ValueError, match="missing input"):
+        Executor().run(bound)
+
+
+def test_linked_probe_matches_interpreted(rng):
+    prog = rctc.compile_conv_relu_softmax(n=1, h=8, w=8, cin=3, cout=9)
+    w = rng.randn(3, 3, 3, 9).astype(np.float32)
+    fs = rimfs.mount(rimfs.pack({"w_conv": w}))
+    x = rng.randn(1, 8, 8, 3).astype(np.float32)
+    ex = Executor()
+    p_lnk: dict = {}
+    ex.run(rbl.bind(prog, rimfs=fs, inputs={"input": x}), probe=p_lnk)
+    p_int: dict = {}
+    ex.run_interpreted(rbl.bind(prog, rimfs=fs, inputs={"input": x}),
+                       probe=p_int)
+    assert set(p_lnk) == set(p_int)
+    for k in p_int:
+        np.testing.assert_allclose(p_lnk[k], p_int[k], rtol=1e-6)
+
+
+def test_linked_graph_exec_artifact(rng):
+    t = {
+        "a": TensorDesc("a", (4,), "float32", "input"),
+        "y": TensorDesc("y", (4,), "float32", "output"),
+    }
+    prog = RCBProgram(
+        "g", t, [RCB(0, "layer", (),
+                     (RCBOp(Op.GRAPH_EXEC, ("y",), ("a",),
+                            {"artifact": "double"}),))],
+        artifacts={"double": lambda a: a * 2})
+    a = rng.randn(4).astype(np.float32)
+    out = Executor().run(rbl.bind(prog, inputs={"a": a}))
+    np.testing.assert_allclose(np.asarray(out["y"]), a * 2)
+
+
+# ---------------------------------------------------------------------------
+# Peephole pass (core/opt.py)
+# ---------------------------------------------------------------------------
+
+def test_opt_fuses_and_is_bit_identical(rng):
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    from repro.models import resnet as rn
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    folded = rn.fold_bn(params)
+    raw, image = rctc.compile_resnet18(cfg, folded, batch=1,
+                                       optimize=False)
+    optd, _ = rctc.compile_resnet18(cfg, folded, batch=1, optimize=True)
+    n_raw, n_opt = opt.op_count(raw), opt.op_count(optd)
+    assert n_opt <= n_raw * 0.85, (n_raw, n_opt)      # >= 15% reduction
+    assert any(op.op is Op.SCALE_SHIFT_RELU for op in optd.ops())
+    assert any(op.op is Op.ADD_RELU for op in optd.ops())
+    fs = rimfs.mount(image)
+    x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
+    ex = Executor()
+    o_raw = np.asarray(jax.block_until_ready(
+        ex.run(rbl.bind(raw, rimfs=fs, inputs={"input": x}))["output"]))
+    o_opt = np.asarray(jax.block_until_ready(
+        ex.run(rbl.bind(optd, rimfs=fs, inputs={"input": x}))["output"]))
+    np.testing.assert_array_equal(o_raw, o_opt)       # bit-identical
+
+
+def test_opt_dequant_quantize_elision_exact():
+    """E1 fires when the int8 source provably came from a clipping
+    QUANTIZE, where the round-trip reproduces the input bits."""
+    t = {
+        "x": TensorDesc("x", (8,), "float32", "input"),
+        "q": TensorDesc("q", (8,), "int8", "scratch"),
+        "f": TensorDesc("f", (8,), "float32", "scratch"),
+        "q2": TensorDesc("q2", (8,), "int8", "output"),
+    }
+    ops = [RCBOp(Op.QUANTIZE, ("q",), ("x",), {"scale": 0.125}),
+           RCBOp(Op.DEQUANT, ("f",), ("q",), {"scale": 0.125}),
+           RCBOp(Op.QUANTIZE, ("q2",), ("f",), {"scale": 0.125})]
+    prog = RCBProgram("rt", t, [RCB(0, "layer", (), tuple(ops))])
+    optd = opt.optimize(prog)
+    kinds = [op.op for op in optd.ops()]
+    assert kinds == [Op.QUANTIZE, Op.PASSTHROUGH]
+    assert "f" not in optd.tensors                    # dead scratch dropped
+    x = np.linspace(-20, 20, 8).astype(np.float32)
+    out_o = np.asarray(Executor().run(rbl.bind(optd,
+                                               inputs={"x": x}))["q2"])
+    out_r = np.asarray(Executor().run(rbl.bind(prog,
+                                               inputs={"x": x}))["q2"])
+    np.testing.assert_array_equal(out_o, out_r)       # bit-identical
+
+
+def test_opt_dequant_quantize_unknown_provenance_gated():
+    """An int8 INPUT may legally hold -128, which the round-trip would
+    re-clip to -127 — so E1 must not fire without ``lossy=True``."""
+    t = {
+        "q": TensorDesc("q", (8,), "int8", "input"),
+        "f": TensorDesc("f", (8,), "float32", "scratch"),
+        "q2": TensorDesc("q2", (8,), "int8", "output"),
+    }
+    ops = [RCBOp(Op.DEQUANT, ("f",), ("q",), {"scale": 0.125}),
+           RCBOp(Op.QUANTIZE, ("q2",), ("f",), {"scale": 0.125})]
+    prog = RCBProgram("rt2", t, [RCB(0, "layer", (), tuple(ops))])
+    assert opt.op_count(opt.optimize(prog)) == 2
+    assert opt.op_count(opt.optimize(prog, lossy=True)) == 1
+
+
+def test_linked_poll_releases_scratch(rng):
+    """A scratch symbol whose LAST reader is a POLL op must still be
+    released by the linked path (free-list chained onto the POLL thunk)."""
+    t = {
+        "x": TensorDesc("x", (4,), "float32", "input"),
+        "s": TensorDesc("s", (4,), "float32", "scratch"),
+        "y": TensorDesc("y", (4,), "float32", "output"),
+    }
+    ops = [RCBOp(Op.RELU, ("s",), ("x",)),
+           RCBOp(Op.PASSTHROUGH, ("y",), ("x",)),
+           RCBOp(Op.POLL, (), ("s",))]
+    prog = RCBProgram("poll", t, [RCB(0, "layer", (), tuple(ops))])
+    bound = rbl.bind(prog, inputs={"x": np.ones(4, np.float32)})
+    ex = Executor()
+    linked = ex.link(bound)
+    released = [linked.names[i] for fl in linked.free_lists for i in fl]
+    assert released == ["s"]
+    assert "y" in ex.run(bound)
+
+
+def test_opt_quantize_dequant_stays_without_lossy():
+    t = {
+        "x": TensorDesc("x", (8,), "float32", "input"),
+        "q": TensorDesc("q", (8,), "int8", "scratch"),
+        "y": TensorDesc("y", (8,), "float32", "output"),
+    }
+    ops = [RCBOp(Op.QUANTIZE, ("q",), ("x",), {"scale": 0.5}),
+           RCBOp(Op.DEQUANT, ("y",), ("q",), {"scale": 0.5})]
+    prog = RCBProgram("qd", t, [RCB(0, "layer", (), tuple(ops))])
+    assert opt.op_count(opt.optimize(prog)) == 2       # lossy rule gated
+    assert opt.op_count(opt.optimize(prog, lossy=True)) == 1
+
+
+def test_opt_dead_op_elimination():
+    t = {
+        "x": TensorDesc("x", (4,), "float32", "input"),
+        "dead1": TensorDesc("dead1", (4,), "float32", "scratch"),
+        "dead2": TensorDesc("dead2", (4,), "float32", "scratch"),
+        "y": TensorDesc("y", (4,), "float32", "output"),
+    }
+    ops = [RCBOp(Op.RELU, ("dead1",), ("x",)),
+           RCBOp(Op.RELU, ("dead2",), ("dead1",)),    # cascades
+           RCBOp(Op.PASSTHROUGH, ("y",), ("x",))]
+    prog = RCBProgram("dead", t, [RCB(0, "layer", (), tuple(ops))])
+    optd = opt.optimize(prog)
+    assert [op.op for op in optd.ops()] == [Op.PASSTHROUGH]
+    assert "dead1" not in optd.tensors and "dead2" not in optd.tensors
+
+
+def test_opt_dma_coalescing():
+    t = {
+        "x": TensorDesc("x", (4,), "float32", "input"),
+        "d1": TensorDesc("d1", (4,), "float32", "scratch"),
+        "d2": TensorDesc("d2", (4,), "float32", "scratch"),
+        "y": TensorDesc("y", (4,), "float32", "output"),
+    }
+    ops = [RCBOp(Op.DMA_H2D, ("d1",), ("x",)),
+           RCBOp(Op.DMA_D2D, ("d2",), ("d1",)),
+           RCBOp(Op.DMA_D2H, ("y",), ("d2",))]
+    prog = RCBProgram("dma", t, [RCB(0, "layer", (), tuple(ops))])
+    optd = opt.optimize(prog)
+    assert opt.op_count(optd) < 3
+    x = np.arange(4, dtype=np.float32)
+    out_o = np.asarray(Executor().run(rbl.bind(optd, inputs={"x": x}))["y"])
+    out_r = np.asarray(Executor().run(rbl.bind(prog, inputs={"x": x}))["y"])
+    np.testing.assert_array_equal(out_o, out_r)
+
+
+def test_opt_preserves_outputs_and_multiuse():
+    """An intermediate read twice must NOT be fused away."""
+    t = {
+        "x": TensorDesc("x", (4,), "float32", "input"),
+        "s": TensorDesc("s", (4,), "float32", "weight"),
+        "b": TensorDesc("b", (4,), "float32", "weight"),
+        "m": TensorDesc("m", (4,), "float32", "scratch"),
+        "r": TensorDesc("r", (4,), "float32", "scratch"),
+        "y": TensorDesc("y", (4,), "float32", "output"),
+    }
+    ops = [RCBOp(Op.SCALE_SHIFT, ("m",), ("x", "s", "b")),
+           RCBOp(Op.RELU, ("r",), ("m",)),
+           RCBOp(Op.ADD, ("y",), ("r", "m"))]         # m read again
+    prog = RCBProgram("mu", t, [RCB(0, "layer", (), tuple(ops))])
+    optd = opt.optimize(prog)
+    assert Op.SCALE_SHIFT in [op.op for op in optd.ops()]
