@@ -16,8 +16,10 @@ Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import pickle
+import re
 import statistics
 import time
 
@@ -26,7 +28,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import opt, rbl, rctc, rimfs
+from repro.core import opt, rbl, rctc, rhal, rimfs
 from repro.core.executor import Executor
 from repro.core.rcb import Op, RCBProgram
 from repro.core.rtpm import Platform
@@ -34,6 +36,7 @@ from repro.models import resnet as rn
 
 ROWS: list[str] = []
 RESULTS: dict[str, dict] = {}
+PREVIOUS: dict[str, dict] = {}        # prior BENCH_core.json (trend rows)
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -53,6 +56,41 @@ def _time(fn, n: int, warmup: int = 3) -> list:
         fn()
         xs.append(time.perf_counter() - t0)
     return xs
+
+
+def _time_steady(fn, n: int, warmup: int) -> list:
+    """Steady-state latency samples (the table3 methodology fix).
+
+    JIT warm-up iterations are run and DISCARDED before sampling starts
+    (they previously leaked into the CV), and the GC is parked during the
+    window so collection pauses don't masquerade as runtime variance.
+    ``fn`` must synchronize per iteration (block_until_ready inside) so a
+    sample is one real end-to-end latency, not an async enqueue.
+    """
+    for _ in range(warmup):
+        fn()
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        xs = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            fn()
+            xs.append(time.perf_counter() - t0)
+    finally:
+        if was_enabled:
+            gc.enable()
+    return xs
+
+
+def _cv(xs, trim: float = 0.05) -> float:
+    """Trimmed CV%: drop the top/bottom ``trim`` fraction (host-contention
+    outliers; the paper likewise discards warm-up/outlier iterations)."""
+    xs = sorted(xs)
+    k = max(1, int(len(xs) * trim))
+    xs = xs[k:-k]
+    return statistics.stdev(xs) / statistics.fmean(xs) * 100
 
 
 # ---------------------------------------------------------------------------
@@ -172,6 +210,111 @@ def table45_kernel_breakdowns(rng=None) -> None:
     emit("table5/passthrough_fused", t_pf / n * 1e6,
          f"total_speedup={t_pe/t_pf:.2f}x (paper: 3.0x)")
 
+    # pure data movement with REAL overlap numbers: the same n-block
+    # transfer stream as explicit DMA ops, blocking per-op vs the
+    # residency plan (batched prefetch prologue + drain epilogue)
+    stream = rctc.compile_transfer_pipeline(n, floats)
+    feeds = {f"in{i}": xs[f"in{i}"] for i in range(n)}
+    bs_int = rbl.bind(stream, inputs=dict(feeds))
+    bs_lnk = rbl.bind(stream, inputs=dict(feeds))
+
+    def s_linked():
+        jax.block_until_ready(list(ex.run(bs_lnk).values()))
+
+    t_si = min(_time(lambda: ex.run_interpreted(bs_int), 10))
+    t_sl = min(_time(s_linked, 10))
+    plan = bs_lnk._linked.residency
+    emit("table5/stream_perop_dma", t_si / n * 1e6,
+         "us per transfer, blocking initiate+wait per block")
+    emit("table5/stream_pipelined", t_sl / n * 1e6,
+         f"speedup={t_si/t_sl:.2f}x vs per-op (paper: 3.0x); "
+         f"moved={plan.bytes_moved}B overlapped={plan.bytes_overlapped}B "
+         f"({plan.bytes_overlapped/plan.bytes_moved:.0%} split-phase)")
+
+
+def table4_dma_pipeline(stages: int = 16, n: int = 64, iters: int = 25,
+                        rng=None) -> None:
+    """Data-movement overhead: blocking per-op DMA vs the residency plan.
+
+    The same H2D->GEMM->D2H stage pipeline runs (a) interpreted — every
+    transfer pays initiate+wait with a host sync (the seed's per-op DMA
+    path) — and (b) linked — every H2D issues split-phase in the batched
+    prefetch prologue and every D2H drains at the epilogue. Movement
+    overhead per mode is isolated by subtracting the identical-compute
+    no-DMA variant. Paper Table 4: 3-7x data-movement reduction."""
+    rng = rng or np.random.RandomState(0)
+    fs = rimfs.mount(rimfs.pack({"b": rng.randn(n, n).astype(np.float32)}))
+    ins = {f"in{i}": rng.randn(n, n).astype(np.float32)
+           for i in range(stages)}
+    ex = Executor()
+
+    def bind(with_dma):
+        return rbl.bind(rctc.compile_dma_pipeline(stages, n,
+                                                  with_dma=with_dma),
+                        rimfs=fs, inputs=dict(ins))
+
+    b_int, b_int0, b_lnk, b_lnk0 = (bind(True), bind(False),
+                                    bind(True), bind(False))
+    o_int = ex.run_interpreted(b_int)
+    o_lnk = ex.run(b_lnk)
+    identical = all(np.array_equal(np.asarray(o_int[k]),
+                                   np.asarray(jax.block_until_ready(
+                                       o_lnk[k]))) for k in o_int)
+
+    def sync_run(b):
+        jax.block_until_ready(list(ex.run(b).values()))
+
+    t_i = min(_time(lambda: ex.run_interpreted(b_int), iters))
+    t_i0 = min(_time(lambda: ex.run_interpreted(b_int0), iters))
+    t_l = min(_time(lambda: sync_run(b_lnk), iters))
+    t_l0 = min(_time(lambda: sync_run(b_lnk0), iters))
+    move_i = max((t_i - t_i0) * 1e6, 0.5)
+    move_l = max((t_l - t_l0) * 1e6, 0.5)
+    plan = b_lnk._linked.residency
+    emit("table4/movement_perop_dma", move_i,
+         f"{stages}-stage pipeline, blocking initiate+wait per transfer")
+    emit("table4/movement_pipelined", move_l,
+         f"reduction={move_i/move_l:.1f}x vs per-op (target >= 3x, "
+         f"paper: 3-7x); bit_identical={identical}")
+    emit("table4/movement_overlap_bytes", 0.0,
+         f"planned moved={plan.bytes_moved}B "
+         f"overlapped={plan.bytes_overlapped}B "
+         f"({plan.bytes_overlapped/plan.bytes_moved:.0%} split-phase); "
+         f"arena_high_water={plan.high_water}B")
+
+
+def residency_reuse_bench(rng=None) -> None:
+    """Zero re-upload residency: repeated binds + engine constructions
+    over one RIMFS image move bytes exactly once (driver DMA counters)."""
+    rng = rng or np.random.RandomState(0)
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    folded = rn.fold_bn(params)
+    prog, image = rctc.compile_resnet18(cfg, folded, batch=1)
+    fs = rimfs.mount(image)
+    driver = rhal.make_eager_driver()
+    x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
+
+    t0 = time.perf_counter()
+    b1 = rbl.bind(prog, rimfs=fs, driver=driver, inputs={"input": x})
+    t_first = time.perf_counter() - t0
+    first_bytes = driver.stats.get("dma_bytes", 0)
+    t0 = time.perf_counter()
+    for _ in range(10):
+        rbl.bind(prog, rimfs=fs, driver=driver, inputs={"input": x})
+        rbl.rebind(b1)
+    t_re = (time.perf_counter() - t0) / 20
+    re_bytes = driver.stats.get("dma_bytes", 0) - first_bytes
+    ex = Executor(driver=driver)
+    out = np.asarray(jax.block_until_ready(ex.run(b1)["output"]))
+    assert out.shape[0] == 1
+    emit("residency/first_bind", t_first * 1e6,
+         f"uploads {first_bytes}B once (batched split-phase)")
+    emit("residency/rebind", t_re * 1e6,
+         f"re-uploaded_bytes={re_bytes} over 20 re-binds "
+         f"(target: 0); speedup={t_first/max(t_re, 1e-9):.0f}x")
+
 
 # ---------------------------------------------------------------------------
 # Table 2: resource utilization + time-to-network-ready
@@ -226,6 +369,16 @@ def table2_resource_utilization(rng=None) -> None:
 # ---------------------------------------------------------------------------
 
 def table3_resnet_inference(rng=None, iters: int = 200) -> None:
+    """Latency + CV, steady-state methodology (the PR 2 fix).
+
+    Both modes sample through ``_time_steady``: JIT warm-up iterations are
+    discarded BEFORE sampling (previously they leaked into the fused CV —
+    22.23%, *worse* than eager: a harness artifact), every iteration ends
+    at ``block_until_ready``, the GC is parked, and the CV is trimmed. A
+    noise-floor row (CV of a trivial pre-compiled dispatch under the same
+    estimator) quantifies the host's irreducible scheduling jitter, so a
+    fused CV at the floor reads as "the runtime adds no variance of its
+    own" — the paper's determinism property, environment-bounded."""
     rng = rng or np.random.RandomState(0)
     cfg = __import__("repro.configs.resnet18",
                      fromlist=["CONFIG"]).CONFIG.smoke()
@@ -236,28 +389,40 @@ def table3_resnet_inference(rng=None, iters: int = 200) -> None:
     ex = Executor()
     x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
 
+    # noise floor: a trivial already-compiled dispatch, same estimator
+    tiny = jax.jit(lambda v: v * 2.0)
+    tx = jnp.ones((8, 8), jnp.float32)
+    floor = _cv(_time_steady(
+        lambda: jax.block_until_ready(tiny(tx)), iters, warmup=30))
+    emit("table3/noise_floor", 0.0,
+         f"cv={floor:.2f}% (host dispatch jitter under the same "
+         f"estimator; CVs below are environment-bounded)")
+
     bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
-    lat_e = _time(lambda: ex.run_interpreted(bound), iters, warmup=10)
+    lat_e = _time_steady(lambda: ex.run_interpreted(bound), iters,
+                         warmup=30)
 
     bound2 = rbl.bind(prog, rimfs=fs)
     fused = ex.fuse(bound2)
     w = ex.weights_from(bound2)
-    lat_f = _time(lambda: jax.block_until_ready(fused({"input": x}, w)),
-                  iters, warmup=10)
+    lat_f = _time_steady(
+        lambda: jax.block_until_ready(fused({"input": x}, w)), iters,
+        warmup=30)
 
-    def cv(xs):
-        # trimmed CV (drop top/bottom 5%): the paper discards warm-up
-        # iterations; trimming also rejects host-contention outliers
-        xs = sorted(xs)[len(xs) // 20: -max(1, len(xs) // 20)]
-        return statistics.stdev(xs) / statistics.fmean(xs) * 100
-
+    cv_e, cv_f = _cv(lat_e), _cv(lat_f)
     mu_e, mu_f = statistics.fmean(lat_e), statistics.fmean(lat_f)
-    emit("table3/eager_latency", mu_e * 1e6, f"cv={cv(lat_e):.2f}%")
-    emit("table3/fused_latency", mu_f * 1e6, f"cv={cv(lat_f):.2f}%")
+    emit("table3/eager_latency", mu_e * 1e6, f"cv={cv_e:.2f}%")
+    emit("table3/fused_latency", mu_f * 1e6, f"cv={cv_f:.2f}%")
+    prev = PREVIOUS.get("table3/fused_latency", {}).get("derived", "")
+    m = re.search(r"cv=([\d.]+)%", prev)
+    emit("table3/cv_trend", 0.0,
+         f"fused_cv prev={m.group(1) + '%' if m else 'n/a'} "
+         f"now={cv_f:.2f}% floor={floor:.2f}% (steady-state fix: "
+         f"warmup discarded, per-iter sync, gc off, 5% trim)")
     # compute efficiency := throughput per device (1 device on this box)
     emit("table3/efficiency_ratio", 0.0,
          f"fused/eager={(1/mu_f)/(1/mu_e):.2f}x (paper: 9.2x per tile); "
-         f"cv_ratio={cv(lat_e)/max(cv(lat_f),1e-9):.1f}x (paper: 21x)")
+         f"cv_ratio={cv_e/max(cv_f,1e-9):.1f}x (paper: 21x)")
 
 
 # ---------------------------------------------------------------------------
@@ -359,15 +524,25 @@ def core_dispatch_bench(rng=None, iters: int = 30) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke profile: minimal iteration counts")
     ap.add_argument("--json", default="BENCH_core.json",
                     help="machine-readable results path")
     args = ap.parse_args()
+    quick = args.quick or args.smoke
+    try:
+        with open(args.json) as f:
+            PREVIOUS.update(json.load(f))          # trend rows
+    except (OSError, ValueError):
+        pass
     print("name,us_per_call,derived")
-    core_dispatch_bench(iters=10 if args.quick else 30)
-    table1_transfer_overhead(total_mb=1.0 if args.quick else 4.0)
+    core_dispatch_bench(iters=10 if quick else 30)
+    table1_transfer_overhead(total_mb=1.0 if quick else 4.0)
     table45_kernel_breakdowns()
+    table4_dma_pipeline(iters=10 if quick else 25)
+    residency_reuse_bench()
     table2_resource_utilization()
-    table3_resnet_inference(iters=50 if args.quick else 200)
+    table3_resnet_inference(iters=50 if quick else 200)
     kernel_microbench()
     with open(args.json, "w") as f:
         json.dump(RESULTS, f, indent=2, sort_keys=True)

@@ -35,7 +35,9 @@ import numpy as np
 from repro.core import linker as linker_mod
 from repro.core import rhal as rhal_mod
 from repro.core.rbl import BoundProgram
+from repro.core.rbl import explicitly_freed as rbl_explicitly_freed
 from repro.core.rcb import Op, RCBProgram
+from repro.core.rhal import DmaTicket
 
 
 @dataclasses.dataclass
@@ -126,11 +128,12 @@ class Executor:
         # released by reference-drop, not driver.free: eager identity ops
         # (PASSTHROUGH, single-device COLLECTIVE) alias their source, so an
         # eager delete would tear buffers still reachable under another
-        # symbol. The linked path applies the same policy via its
-        # precomputed free-lists.
+        # symbol. Symbols with an explicit FREE op are exempt — FREE must
+        # see the real buffer to return its arena range. The linked path
+        # applies the same policy via its precomputed free-lists.
         if free_after is not None:
             for s in op.srcs:
-                if free_after.get(s) == idx:
+                if free_after.get(s) == idx and s not in self._explicit_free:
                     t = self._prog.tensors.get(s)
                     if t is not None and t.kind == "scratch":
                         buffers.pop(s, None)
@@ -168,6 +171,8 @@ class Executor:
             for i, buf in enumerate(slots):
                 if buf is not None:
                     _probe_update(probe_dev, linked.names[i], buf)
+        for pre in linked.prologue:                # prefetch issue phase
+            pre(slots, rimfs)
         if probe_dev is None and self.rtpm is None:
             for thunk in linked.thunks:            # THE hot loop
                 thunk(slots, rimfs)
@@ -180,9 +185,11 @@ class Executor:
                     thunks[k](slots, rimfs)
                     if probe_dev is not None:
                         for d in metas[k].dst_slots:
-                            if slots[d] is not None:
+                            buf = slots[d]
+                            if buf is not None and \
+                                    type(buf) is not DmaTicket:
                                 _probe_update(probe_dev, linked.names[d],
-                                              slots[d])
+                                              buf)
                 if self.rtpm is not None:
                     # sync the block's products so "seconds" reflects
                     # execution, not async enqueue
@@ -195,7 +202,14 @@ class Executor:
                     self.rtpm.post("rcb_complete",
                                    {"block": block_id,
                                     "seconds": time.perf_counter() - t_blk})
+        for epi in linked.epilogue:                # drain redeem phase
+            epi(slots, rimfs)
         self.driver._count("dispatch", linked.n_compute)
+        plan = linked.residency
+        if self.rtpm is not None and plan is not None and plan.bytes_moved:
+            self.rtpm.post("dma_complete",
+                           {"bytes_moved": plan.bytes_moved,
+                            "bytes_overlapped": plan.bytes_overlapped})
         if probe_dev is not None:
             _probe_flush(probe, probe_dev)
         out = {}
@@ -215,6 +229,7 @@ class Executor:
         against, and as the per-op measurement mode (``trace_ops``).
         """
         self._prog = bound.program
+        self._explicit_free = rbl_explicitly_freed(bound.program)
         buffers = dict(bound.buffers)
         if inputs:
             buffers.update(inputs)
@@ -270,14 +285,21 @@ class Executor:
         output_slots = linked.output_slots
         n_slots = linked.n_slots
 
+        prologue = linked.prologue
+        epilogue = linked.epilogue
+
         def staged(inputs: dict, weights: dict) -> dict:
             slots: list = [None] * n_slots
             for k, i in weight_slots.items():
                 slots[i] = weights[k]
             for k, i in input_slots.items():
                 slots[i] = inputs[k]
+            for pre in prologue:
+                pre(slots, None)
             for thunk in thunks:
                 thunk(slots, None)
+            for epi in epilogue:
+                epi(slots, None)
             return {name: slots[i] for name, i in output_slots
                     if slots[i] is not None}
 

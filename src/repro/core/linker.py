@@ -1,4 +1,4 @@
-"""Program linker — the compiled RCB dispatch path.
+"""Program linker — the compiled RCB dispatch + data-movement path.
 
 The interpreted executor re-decodes every op on every step: a ~15-branch
 if/elif chain, symbolic dict lookups for each operand, a liveness probe per
@@ -11,13 +11,22 @@ design eliminates.  The linker pays all of them ONCE, at bind time:
     ``link_compute`` vtable slot (for the eager driver: a per-site jitted
     executable dispatched asynchronously — XLA's cached fast path);
   * every scratch release point is baked in as a precomputed free-list
-    (tuple of slot indices cleared right after the op that last reads them).
+    (tuple of slot indices cleared right after the op that last reads them);
+  * every transfer is scheduled by a static **residency plan**
+    (``plan_residency``): device-resident symbols get arena offsets from a
+    simulated first-fit allocation over the RBL liveness intervals, H2D
+    transfers whose source is live at program entry are hoisted into a
+    **prefetch prologue** (issued split-phase through the RHAL ``dma_async``
+    slot before the first compute dispatch), and D2H transfers nothing
+    re-reads are sunk into a **drain epilogue** — so transfers of ops k±1
+    overlap op k's compute.  Blocking drivers (no ``dma_async``) keep the
+    per-op initiate/wait pair.
 
-The result is a ``LinkedProgram`` whose execution is a tight
-``for thunk in thunks: thunk(slots, rimfs)`` loop — see Executor.run — and
-whose thunks are equally traceable under ``jax.jit`` (Executor.fuse stages
-the same linked form through the trace driver).  DESIGN.md §4 has the full
-contract.
+The result is a ``LinkedProgram`` whose execution is
+``prologue; for thunk in thunks: thunk(slots, rimfs); epilogue`` — see
+Executor.run — and whose thunks are equally traceable under ``jax.jit``
+(Executor.fuse stages the same linked form through the trace driver).
+DESIGN.md §4 and §6 have the full contract.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ from typing import Any, Callable, Optional
 
 from repro.core import rbl as rbl_mod
 from repro.core.rcb import Op, RCBProgram
+from repro.core.rhal import (ARENA_ALIGN, DeviceArena, DmaTicket, _nbytes_of)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +46,97 @@ class ThunkMeta:
     op: Op
     dst_slots: tuple
     dst_names: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencyPlan:
+    """Static buffer-residency + transfer schedule for one LinkedProgram.
+
+    Computed once at link time from the RBL liveness intervals — never per
+    dispatch (DESIGN.md §6). Offsets come from a simulated first-fit
+    ``DeviceArena`` walk, so ``high_water`` is exactly the peak the arena
+    would reach replaying the program's alloc/free sequence.
+    """
+    offsets: dict            # device-resident symbol -> arena offset
+    sizes: dict              # symbol -> aligned nbytes
+    high_water: int          # peak arena bytes over the program
+    arena_align: int
+    prefetch_syms: tuple     # DMA_H2D dsts issued in the prologue
+    drain_syms: tuple        # DMA_D2H dsts redeemed in the epilogue
+    donated: tuple           # scratch syms whose dead range a later alloc reuses
+    bytes_moved: int         # total DMA payload bytes per execution
+    bytes_overlapped: int    # bytes issued split-phase (overlap-eligible)
+
+
+def plan_residency(bound: rbl_mod.BoundProgram) -> ResidencyPlan:
+    """Simulate device residency over the linear op stream.
+
+    Weights pin at offset order 0..n at program entry (the RIMFS residency
+    set); scratch/output ranges allocate at first definition and scratch
+    frees at last read (the same schedule the thunk free-lists apply);
+    outputs stay live to program exit.  Host-side symbols (inputs and
+    DMA_D2H destinations) never enter the arena.
+    """
+    prog = bound.program
+    last_use = bound.last_use
+    ops = list(prog.ops())
+
+    d2h_dsts = {op.dsts[0] for op in ops if op.op is Op.DMA_D2H}
+    written_before: set = set()
+    prefetch, drain = [], []
+    bytes_moved = bytes_overlapped = 0
+    for i, op in enumerate(ops):
+        if op.op in (Op.DMA_H2D, Op.DMA_D2H, Op.DMA_D2D):
+            t = prog.tensors.get(op.srcs[0])
+            nbytes = _nbytes_of(t.shape, t.dtype) if t is not None else 0
+            bytes_moved += nbytes
+            if op.op is Op.DMA_H2D and op.srcs[0] not in written_before:
+                # source is live at program entry -> issue in the prologue
+                prefetch.append(op.dsts[0])
+                bytes_overlapped += nbytes
+            elif op.op is Op.DMA_D2H and last_use.get(op.dsts[0], -1) <= i:
+                # nothing re-reads the host copy -> redeem at the drain
+                drain.append(op.dsts[0])
+                bytes_overlapped += nbytes
+        written_before.update(op.dsts)
+
+    def resident(sym: str) -> bool:
+        t = prog.tensors.get(sym)
+        return (t is not None and t.kind != "input" and sym not in d2h_dsts)
+
+    sizes = {n: _nbytes_of(t.shape, t.dtype)
+             for n, t in prog.tensors.items() if resident(n)}
+    total = sum(max(ARENA_ALIGN, ((s + ARENA_ALIGN - 1) // ARENA_ALIGN)
+                    * ARENA_ALIGN) for s in sizes.values())
+    arena = DeviceArena(max(total, ARENA_ALIGN) + ARENA_ALIGN)
+    offsets: dict[str, int] = {}
+    freed_at: dict[str, tuple] = {}      # sym -> (offset, size, op index)
+    donated: list = []
+    for name, t in prog.tensors.items():             # weights pin first
+        if t.kind == "weight" and resident(name):
+            offsets[name] = arena.alloc(sizes[name])
+    frees_by_idx = rbl_mod.scratch_free_lists(prog, last_use)
+    for i, op in enumerate(ops):
+        for dst in op.dsts:
+            if op.op is not Op.FREE and resident(dst) \
+                    and dst not in offsets:
+                off = arena.alloc(sizes[dst])
+                offsets[dst] = off
+                for sym, (foff, fsz, fidx) in freed_at.items():
+                    if sym not in donated and fidx < i \
+                            and off < foff + fsz \
+                            and foff < off + sizes[dst]:
+                        donated.append(sym)          # dead range reused
+        released = list(frees_by_idx[i])
+        if op.op is Op.FREE and op.dsts[0] in offsets:
+            released.append(op.dsts[0])
+        for sym in released:
+            if sym in offsets and sym not in freed_at:
+                arena.free(offsets[sym])
+                freed_at[sym] = (offsets[sym], arena._round(sizes[sym]), i)
+    return ResidencyPlan(offsets, sizes, arena.high_water, ARENA_ALIGN,
+                         tuple(prefetch), tuple(drain), tuple(donated),
+                         bytes_moved, bytes_overlapped)
 
 
 @dataclasses.dataclass
@@ -54,6 +155,9 @@ class LinkedProgram:
     missing_inputs: tuple          # (symbol, slot) the caller must feed
     free_lists: tuple              # per-thunk tuple of slot indices released
     n_compute: int                 # compute dispatches (bulk stats update)
+    residency: Optional[ResidencyPlan] = None
+    prologue: tuple = ()           # prefetch issue thunks (run before thunks)
+    epilogue: tuple = ()           # drain redeem thunks (run after thunks)
 
     @property
     def n_slots(self) -> int:
@@ -110,7 +214,8 @@ def link(bound: rbl_mod.BoundProgram, driver,
     """Lower a BoundProgram into a LinkedProgram against one driver.
 
     Linking is pure resolution — no device work happens here (the eager
-    driver's per-site jits trace lazily on first execution).
+    driver's per-site jits trace lazily on first execution; DMA issue
+    happens when the prologue runs, not when it is built).
     """
     prog = bound.program
     names = list(prog.tensors.keys())
@@ -118,10 +223,22 @@ def link(bound: rbl_mod.BoundProgram, driver,
     frees_by_idx = rbl_mod.scratch_free_lists(prog, bound.last_use)
     link_compute = driver.link_compute
     artifacts = {**prog.artifacts, **(artifacts or {})}
+    plan = plan_residency(bound)
+    use_async = driver.dma_async is not None and driver.dma_wait is not None
+    if not use_async:
+        # blocking driver: nothing issues split-phase, so the attached
+        # plan must not advertise overlap this link will never execute
+        plan = dataclasses.replace(plan, prefetch_syms=(), drain_syms=(),
+                                   bytes_overlapped=0)
+    prefetch_syms = set(plan.prefetch_syms)
+    drain_syms = set(plan.drain_syms)
+    dma_async, dma_redeem = driver.dma_async, driver.dma_wait
 
     thunks: list = []
     metas: list = []
     block_spans: list = []
+    prefetch_entries: list = []                    # (dst_slot, src_slot, sym)
+    epilogue: list = []
     n_compute = 0
     free_lists: list = []
     idx = 0                                        # linear op index
@@ -160,27 +277,78 @@ def link(bound: rbl_mod.BoundProgram, driver,
                 def thunk(slots, rimfs, _b=bind_const, _d=d, _v=value):
                     slots[_d] = _b(_v)
             elif kind is Op.DMA_H2D:
-                initiate, wait = driver.initiate_dma, driver.wait_dma
                 d, s, sname = dslots[0], sslots[0], op.srcs[0]
+                if use_async and op.dsts[0] in prefetch_syms:
+                    # split phase: issue in the prologue (before the first
+                    # compute dispatch), redeem the ticket at the op site —
+                    # the transfer rides under every dispatch in between.
+                    prefetch_entries.append((d, s, sname))
 
-                def thunk(slots, rimfs, _i=initiate, _w=wait, _d=d, _s=s,
-                          _n=sname, _fr=frees):
-                    host = slots[_s]
-                    if host is None and rimfs is not None:
-                        host = rimfs.read(_n)
-                    slots[_d] = _w(_i(host, "h2d"))
+                    def thunk(slots, rimfs, _w=dma_redeem, _ia=dma_async,
+                              _d=d, _s=s, _n=sname, _fr=frees):
+                        t = slots[_d]
+                        if type(t) is DmaTicket:
+                            slots[_d] = _w(t)
+                        else:                      # prologue skipped
+                            host = slots[_s]
+                            if host is None and rimfs is not None:
+                                host = rimfs.read(_n)
+                            slots[_d] = _w(_ia(host, "h2d"))
+                        for f in _fr:
+                            slots[f] = None
+                elif use_async:
+                    def thunk(slots, rimfs, _w=dma_redeem, _ia=dma_async,
+                              _d=d, _s=s, _n=sname, _fr=frees):
+                        host = slots[_s]
+                        if host is None and rimfs is not None:
+                            host = rimfs.read(_n)
+                        slots[_d] = _w(_ia(host, "h2d"))
+                        for f in _fr:
+                            slots[f] = None
+                else:
+                    initiate, wait = driver.initiate_dma, driver.wait_dma
+
+                    def thunk(slots, rimfs, _i=initiate, _w=wait, _d=d,
+                              _s=s, _n=sname, _fr=frees):
+                        host = slots[_s]
+                        if host is None and rimfs is not None:
+                            host = rimfs.read(_n)
+                        slots[_d] = _w(_i(host, "h2d"))
+                        for f in _fr:
+                            slots[f] = None
+            elif kind is Op.DMA_D2H and use_async \
+                    and op.dsts[0] in drain_syms:
+                d, s = dslots[0], sslots[0]
+                # issue here, redeem in the epilogue: the device->host copy
+                # of op k-1 completes under op k's compute.
+                def thunk(slots, rimfs, _ia=dma_async, _d=d, _s=s,
+                          _fr=frees):
+                    slots[_d] = _ia(slots[_s], "d2h", prefetched=True)
                     for f in _fr:
                         slots[f] = None
+
+                def epi(slots, rimfs, _w=dma_redeem, _d=d):
+                    t = slots[_d]
+                    if type(t) is DmaTicket:
+                        slots[_d] = _w(t)
+                epilogue.append(epi)
             elif kind is Op.DMA_D2H or kind is Op.DMA_D2D:
-                initiate, wait = driver.initiate_dma, driver.wait_dma
                 direction = "d2h" if kind is Op.DMA_D2H else "d2d"
                 d, s = dslots[0], sslots[0]
+                if use_async:
+                    def thunk(slots, rimfs, _w=dma_redeem, _ia=dma_async,
+                              _d=d, _s=s, _dir=direction, _fr=frees):
+                        slots[_d] = _w(_ia(slots[_s], _dir))
+                        for f in _fr:
+                            slots[f] = None
+                else:
+                    initiate, wait = driver.initiate_dma, driver.wait_dma
 
-                def thunk(slots, rimfs, _i=initiate, _w=wait, _d=d, _s=s,
-                          _dir=direction, _fr=frees):
-                    slots[_d] = _w(_i(slots[_s], _dir))
-                    for f in _fr:
-                        slots[f] = None
+                    def thunk(slots, rimfs, _i=initiate, _w=wait, _d=d,
+                              _s=s, _dir=direction, _fr=frees):
+                        slots[_d] = _w(_i(slots[_s], _dir))
+                        for f in _fr:
+                            slots[f] = None
             elif kind is Op.GRAPH_EXEC:
                 fn = artifacts.get(attrs["artifact"])
                 if fn is None:
@@ -217,7 +385,8 @@ def link(bound: rbl_mod.BoundProgram, driver,
                 fence = driver.fence
 
                 def thunk(slots, rimfs, _f=fence):
-                    _f([b for b in slots if b is not None])
+                    _f([b for b in slots
+                        if b is not None and type(b) is not DmaTicket])
             elif kind is Op.POLL:
                 poll = driver.poll
                 s = sslots[0] if sslots else None
@@ -254,6 +423,32 @@ def link(bound: rbl_mod.BoundProgram, driver,
             free_lists.append(frees)
         block_spans.append((block.block_id, start, len(thunks)))
 
+    prologue: list = []
+    if prefetch_entries:
+        batch = driver.dma_async_batch
+        if batch is not None:
+            # the whole prefetch stream issues under ONE engine call: n
+            # transfers, one descriptor (paper §5.3 batching)
+            def pro(slots, rimfs, _ia=batch, _es=tuple(prefetch_entries)):
+                hosts = []
+                for _, s_, n_ in _es:
+                    host = slots[s_]
+                    if host is None and rimfs is not None:
+                        host = rimfs.read(n_)
+                    hosts.append(host)
+                for (d_, _, _), t in zip(_es, _ia(hosts, "h2d",
+                                                  prefetched=True)):
+                    slots[d_] = t
+            prologue.append(pro)
+        else:
+            for d_, s_, n_ in prefetch_entries:
+                def pro(slots, rimfs, _ia=dma_async, _d=d_, _s=s_, _n=n_):
+                    host = slots[_s]
+                    if host is None and rimfs is not None:
+                        host = rimfs.read(_n)
+                    slots[_d] = _ia(host, "h2d", prefetched=True)
+                prologue.append(pro)
+
     input_slots = {n: slot_of[n] for n, t in prog.tensors.items()
                    if t.kind == "input"}
     weight_slots = {n: slot_of[n] for n, t in prog.tensors.items()
@@ -264,4 +459,4 @@ def link(bound: rbl_mod.BoundProgram, driver,
     return LinkedProgram(prog, driver, slot_of, names, thunks, metas,
                          block_spans, input_slots, weight_slots,
                          output_slots, missing, tuple(free_lists),
-                         n_compute)
+                         n_compute, plan, tuple(prologue), tuple(epilogue))

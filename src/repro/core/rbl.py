@@ -43,19 +43,31 @@ def liveness(program: RCBProgram) -> dict:
     return last
 
 
+def explicitly_freed(program: RCBProgram) -> set:
+    """Symbols released by an explicit FREE op (driver-managed lifetime)."""
+    return {op.dsts[0] for op in program.ops()
+            if op.op is Op.FREE and op.dsts}
+
+
 def scratch_free_lists(program: RCBProgram,
                        last_use: Optional[dict] = None) -> list:
     """Per-linear-op-index tuples of scratch symbols whose last read is that
     op — the precomputed release schedule the linker bakes into each thunk
     (the interpreted path derives the same decisions from ``last_use`` one
     dict probe per operand per step; linked pays nothing until the actual
-    release point)."""
+    release point).
+
+    Symbols with an explicit FREE op are excluded: their release belongs
+    to the driver (which must see the real buffer to return its arena
+    range — a reference-drop at last read would hand FREE a cleared slot
+    and leak the range)."""
     last_use = liveness(program) if last_use is None else last_use
+    explicit = explicitly_freed(program)
     n_ops = sum(len(b.ops) for b in program.blocks)
     frees: list[list] = [[] for _ in range(n_ops)]
     for sym, idx in last_use.items():
         t = program.tensors.get(sym)
-        if t is not None and t.kind == "scratch":
+        if t is not None and t.kind == "scratch" and sym not in explicit:
             frees[idx].append(sym)
     return [tuple(f) for f in frees]
 
@@ -80,17 +92,30 @@ def bind(program: RCBProgram,
     inputs = inputs or {}
     buffers: dict[str, Any] = {}
     missing = []
+    # With a driver, weights resolve through the image's per-driver
+    # residency cache: the first bind pins THIS PROGRAM's weight files
+    # device-side ONCE (split-phase upload into the arena; later binds of
+    # other programs extend the pinned set incrementally); every later
+    # bind — including rebind() after elasticity events and repeated
+    # ServingEngine construction — reuses the pinned buffers and moves
+    # zero bytes. CRC verification, when requested, happens BEFORE any
+    # byte is uploaded or cached.
+    weight_names = [n for n, t in program.tensors.items()
+                    if t.kind == "weight"]
+    resident = None
+    if weight_names and rimfs is None:
+        raise ValueError(f"weight {weight_names[0]!r} needs a RIMFS image")
+    if verify_weights:
+        for name in weight_names:
+            rimfs.verify(name)
+    if driver is not None and rimfs is not None and weight_names:
+        resident = rimfs.resident(driver, names=weight_names)
     for name, t in program.tensors.items():
         if t.kind == "weight":
-            if rimfs is None:
-                raise ValueError(f"weight {name!r} needs a RIMFS image")
-            if verify_weights:
-                rimfs.verify(name)
-            view = rimfs.read(name)                 # zero-copy host view
-            if driver is not None:
-                buffers[name] = driver.initiate_dma(view, "h2d")
+            if resident is not None:
+                buffers[name] = resident[name]      # pinned device buffer
             else:
-                buffers[name] = view
+                buffers[name] = rimfs.read(name)    # zero-copy host view
         elif t.kind == "input":
             if name in inputs:
                 buffers[name] = inputs[name]

@@ -119,6 +119,51 @@ def compile_matmul(n=64, dtype="float32", with_dma: bool = False) -> RCBProgram:
     return b.build()
 
 
+def compile_dma_pipeline(n_stages: int, n: int = 64, dtype="float32",
+                         with_dma: bool = True) -> RCBProgram:
+    """Table 4 pipelining microbench: ``n_stages`` independent
+    H2D -> GEMM -> D2H stages in one control stream.
+
+    Under the blocking per-op path every stage pays the full transfer
+    round-trip; under the residency plan the linker prefetches every H2D
+    in the prologue and drains every D2H in the epilogue, so stage *k*'s
+    transfers ride under stage *k±1*'s compute. ``with_dma=False`` emits
+    the identical compute without the transfers — the subtraction that
+    isolates data-movement overhead per mode."""
+    b = _Builder(f"dma_pipeline_{n_stages}" + ("" if with_dma else "_nodma"))
+    b.tensor("b", (n, n), dtype, "weight")
+    for i in range(n_stages):
+        b.tensor(f"in{i}", (n, n), dtype, "input")
+        b.tensor(f"out{i}", (n, n), dtype, "output")
+        if with_dma:
+            dev = b.scratch((n, n), dtype, f"dev{i}")
+            b.emit(Op.DMA_H2D, [dev], [f"in{i}"])
+            acc = b.scratch((n, n), dtype, f"acc{i}")
+            b.emit(Op.GEMM, [acc], [dev, "b"])
+            b.emit(Op.DMA_D2H, [f"out{i}"], [acc])
+        else:
+            b.emit(Op.GEMM, [f"out{i}"], [f"in{i}", "b"])
+    b.emit(Op.FENCE)
+    return b.build()
+
+
+def compile_transfer_pipeline(n_blocks: int, floats: int,
+                              dtype="float32") -> RCBProgram:
+    """Table 5 pure data movement: ``n_blocks`` independent H2D->D2H block
+    transfers in one control stream (no compute). Blocking per-op DMA pays
+    2*n round-trips; the residency plan issues every H2D in one batched
+    prologue and drains every D2H at the epilogue."""
+    b = _Builder(f"transfer_pipeline_{n_blocks}")
+    for i in range(n_blocks):
+        b.tensor(f"in{i}", (floats,), dtype, "input")
+        b.tensor(f"out{i}", (floats,), dtype, "output")
+        dev = b.scratch((floats,), dtype, f"dev{i}")
+        b.emit(Op.DMA_H2D, [dev], [f"in{i}"])
+        b.emit(Op.DMA_D2H, [f"out{i}"], [dev])
+    b.emit(Op.FENCE)
+    return b.build()
+
+
 def compile_conv_relu_softmax(n=1, h=8, w=8, cin=3, cout=9) -> RCBProgram:
     """The paper's data-path correctness pipeline (Conv2D->ReLU->Softmax)."""
     b = _Builder("conv_relu_softmax")

@@ -20,9 +20,27 @@ Two drivers ship:
   * ``TraceDriver``  — records the same calls symbolically so the executor
     can stage one fused XLA program per RCB program: the baremetal analogue
     (one dispatch per step, zero host round-trips inside).
+
+Two memory/transfer extensions back the compiled data-movement path
+(DESIGN.md §6):
+
+  * ``DeviceArena`` — one up-front device slab suballocated by offset with
+    RIMFS-matching 128 B alignment. On TPU/XLA the slab is *modeled* (XLA
+    owns physical device memory), but the arena reproduces the paper's
+    deterministic offset discipline: the linker's residency plan, the
+    high-water mark, fragmentation and the free-list are all real and
+    testable, and on a raw-pointer backend the same offsets would index an
+    actual slab.
+  * split-phase DMA — ``dma_async`` returns a ``DmaTicket`` immediately;
+    ``dma_wait`` redeems it. Issue and wait are separate vtable slots so
+    the linker can hoist issues ahead of use (prefetch H2D of op *k+1*
+    under op *k*'s compute) and sink waits to the drain point (D2H of op
+    *k−1* completes under op *k*). The blocking ``initiate_dma``/
+    ``wait_dma`` pair remains the interpreted per-op baseline.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import time
 from typing import Any, Callable, Optional
@@ -34,6 +52,9 @@ import numpy as np
 from repro.core import oplib
 from repro.core.rcb import Op
 
+ARENA_ALIGN = 128                 # matches rimfs.ALIGN: one DMA lane quantum
+DEFAULT_ARENA_BYTES = 1 << 30     # modeled slab size for the eager driver
+
 
 @dataclasses.dataclass(frozen=True)
 class DeviceConstants:
@@ -43,6 +64,118 @@ class DeviceConstants:
     hbm_bandwidth: float = 819e9             # B/s per chip
     ici_link_bandwidth: float = 50e9         # B/s per link
     hbm_bytes: float = 16e9
+
+
+class ArenaError(RuntimeError):
+    pass
+
+
+class DeviceArena:
+    """Offset-based suballocator over one up-front device slab.
+
+    First-fit over a sorted free-list with neighbour coalescing on free;
+    every range is aligned to ``align`` (128 B — RIMFS lane width). With
+    ``debug=True`` every alloc/free re-verifies the full invariant set: live
+    ranges pairwise disjoint, live and free ranges disjoint, everything
+    aligned and in-bounds.
+    """
+
+    def __init__(self, capacity: int = DEFAULT_ARENA_BYTES,
+                 align: int = ARENA_ALIGN, debug: bool = False):
+        if capacity <= 0 or capacity % align:
+            raise ArenaError(f"capacity {capacity} not a multiple of {align}")
+        self.capacity = capacity
+        self.align = align
+        self.debug = debug
+        self._free: list[tuple[int, int]] = [(0, capacity)]  # (offset, size)
+        self._live: dict[int, int] = {}                      # offset -> size
+        self.bytes_in_use = 0
+        self.high_water = 0
+        self.n_allocs = 0
+
+    # ------------------------------------------------------------------ api
+    def _round(self, nbytes: int) -> int:
+        nbytes = max(1, int(nbytes))
+        return (nbytes + self.align - 1) // self.align * self.align
+
+    def alloc(self, nbytes: int) -> int:
+        """Reserve an aligned range; returns its slab offset."""
+        size = self._round(nbytes)
+        for i, (off, avail) in enumerate(self._free):
+            if avail >= size:
+                if avail == size:
+                    self._free.pop(i)
+                else:
+                    self._free[i] = (off + size, avail - size)
+                self._live[off] = size
+                self.bytes_in_use += size
+                self.high_water = max(self.high_water, self.bytes_in_use)
+                self.n_allocs += 1
+                if self.debug:
+                    self.check()
+                return off
+        raise ArenaError(
+            f"arena exhausted: need {size}B, in_use={self.bytes_in_use}B "
+            f"of {self.capacity}B ({len(self._free)} free ranges)")
+
+    def free(self, offset: int) -> None:
+        """Return a range to the free-list (coalescing with neighbours)."""
+        size = self._live.pop(offset, None)
+        if size is None:
+            raise ArenaError(f"free of unallocated offset {offset}")
+        self.bytes_in_use -= size
+        i = bisect.bisect_left(self._free, (offset, 0))
+        # coalesce right
+        if i < len(self._free) and offset + size == self._free[i][0]:
+            size += self._free[i][1]
+            self._free.pop(i)
+        # coalesce left
+        if i > 0 and self._free[i - 1][0] + self._free[i - 1][1] == offset:
+            offset, size = (self._free[i - 1][0],
+                            self._free[i - 1][1] + size)
+            self._free[i - 1] = (offset, size)
+        else:
+            self._free.insert(i, (offset, size))
+        if self.debug:
+            self.check()
+
+    def live_ranges(self) -> list:
+        return sorted((o, s) for o, s in self._live.items())
+
+    def check(self) -> None:
+        """Assert the full disjointness/alignment invariant set."""
+        ranges = ([(o, s, "live") for o, s in self._live.items()]
+                  + [(o, s, "free") for o, s in self._free])
+        ranges.sort()
+        prev_end, prev_kind = 0, None
+        covered = 0
+        for off, size, kind in ranges:
+            if off % self.align or size % self.align:
+                raise ArenaError(f"unaligned {kind} range ({off}, {size})")
+            if off < prev_end:
+                raise ArenaError(
+                    f"{kind} range at {off} overlaps previous "
+                    f"{prev_kind} range ending at {prev_end}")
+            prev_end, prev_kind = off + size, kind
+            covered += size
+        if prev_end > self.capacity or covered != self.capacity:
+            raise ArenaError("arena ranges do not tile the slab")
+
+    def reset(self) -> None:
+        self._free = [(0, self.capacity)]
+        self._live.clear()
+        self.bytes_in_use = 0
+
+
+@dataclasses.dataclass
+class DmaTicket:
+    """Split-phase transfer handle: issued by ``dma_async``, redeemed by
+    ``dma_wait``. ``prefetched`` marks issues the linker hoisted ahead of
+    the consuming op (the overlap-eligible bytes telemetry counts)."""
+    buf: Any
+    direction: str
+    nbytes: int
+    prefetched: bool = False
 
 
 @dataclasses.dataclass
@@ -67,24 +200,57 @@ class HalDriver:
     # ``None`` means the backend has no compiled path; the linker then falls
     # back to per-op ``dispatch_compute``.
     link_compute: Optional[Callable[[Op, dict], Callable]] = None
+    # Optional split-phase DMA slots (compiled data-movement path). A
+    # backend filling both lets the linker pipeline transfers; ``None``
+    # falls back to the blocking initiate_dma/wait_dma pair.
+    dma_async: Optional[Callable[[Any, str], DmaTicket]] = None
+    dma_wait: Optional[Callable[[DmaTicket], Any]] = None
+    # Optional batched issue: one engine call for a whole transfer stream
+    # (the prefetch prologue, a resident-image upload). Falls back to
+    # per-buffer dma_async when absent.
+    dma_async_batch: Optional[Callable[[list, str], list]] = None
+    # Optional device arena backing alloc/free and RIMFS residency.
+    arena: Optional[DeviceArena] = None
 
     def _count(self, key: str, n: int = 1):
         self.stats[key] = self.stats.get(key, 0) + n
+
+
+def _nbytes_of(shape, dtype) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n * np.dtype(dtype).itemsize
 
 
 # ---------------------------------------------------------------------------
 # Eager driver (OS-mediated analogue): one device round-trip per primitive.
 # ---------------------------------------------------------------------------
 
-def make_eager_driver(device: Optional[jax.Device] = None) -> HalDriver:
+def make_eager_driver(device: Optional[jax.Device] = None,
+                      arena_bytes: int = DEFAULT_ARENA_BYTES,
+                      debug_arena: bool = False) -> HalDriver:
     device = device or jax.devices()[0]
+    arena = DeviceArena(arena_bytes, debug=debug_arena)
+    # id(buf) -> arena offset for arena-backed allocations. An id is only
+    # recorded while its buffer is registered, and re-allocation overwrites
+    # the entry, so recycled ids cannot alias a stale offset.
+    offsets: dict[int, int] = {}
+
+    def _register(buf, nbytes):
+        offsets[id(buf)] = arena.alloc(nbytes)
+        return buf
 
     def alloc(shape, dtype):
         d._count("alloc")
-        return jax.device_put(jnp.zeros(shape, jnp.dtype(dtype)), device)
+        buf = jax.device_put(jnp.zeros(shape, jnp.dtype(dtype)), device)
+        return _register(buf, _nbytes_of(shape, dtype))
 
     def free(buf):
         d._count("free")
+        off = offsets.pop(id(buf), None)
+        if off is not None:
+            arena.free(off)         # offset really returns to the free-list
         if hasattr(buf, "delete"):
             try:
                 buf.delete()
@@ -96,6 +262,7 @@ def make_eager_driver(device: Optional[jax.Device] = None) -> HalDriver:
 
     def initiate_dma(host_buf, direction):
         d._count("dma")
+        d._count("dma_bytes", int(getattr(host_buf, "nbytes", 0)))
         if direction == "d2h":
             return np.asarray(host_buf)            # device -> host pull
         return jax.device_put(jnp.asarray(host_buf), device)
@@ -104,6 +271,52 @@ def make_eager_driver(device: Optional[jax.Device] = None) -> HalDriver:
         d._count("dma_wait")
         return jax.block_until_ready(buf) if hasattr(buf, "block_until_ready") \
             else buf
+
+    def dma_async(host_buf, direction, prefetched=False):
+        """Issue half: returns a ticket immediately, no host sync.
+
+        h2d/d2d enqueue a device_put (asynchronous under XLA); d2h starts
+        the device->host copy in the background. Completion is observed at
+        ``dma_wait`` (d2h materialization) or, for device-side consumers,
+        by XLA data-flow ordering — the host blocks only at FENCE/exit.
+        """
+        nbytes = int(getattr(host_buf, "nbytes", 0))
+        d._count("dma_async")
+        d._count("dma_bytes", nbytes)
+        if prefetched:
+            d._count("dma_overlapped_bytes", nbytes)
+        if direction == "d2h":
+            if hasattr(host_buf, "copy_to_host_async"):
+                host_buf.copy_to_host_async()
+            return DmaTicket(host_buf, "d2h", nbytes, prefetched)
+        buf = jax.device_put(jnp.asarray(host_buf), device)
+        return DmaTicket(buf, direction, nbytes, prefetched)
+
+    def dma_wait_(ticket):
+        d._count("dma_ticket_wait")
+        if ticket.direction == "d2h":
+            return np.asarray(ticket.buf)          # materialize on host
+        return ticket.buf                          # ordered by data flow
+
+    def dma_async_batch(host_bufs, direction, prefetched=False):
+        """One engine call for a whole transfer stream: n buffers move
+        under a single descriptor (paper §5.3 batching), paying the
+        issue fixed cost once instead of once per block."""
+        sizes = [int(getattr(h, "nbytes", 0)) for h in host_bufs]
+        d._count("dma_async", len(host_bufs))
+        d._count("dma_batch")
+        d._count("dma_bytes", sum(sizes))
+        if prefetched:
+            d._count("dma_overlapped_bytes", sum(sizes))
+        if direction == "d2h":
+            for h in host_bufs:
+                if hasattr(h, "copy_to_host_async"):
+                    h.copy_to_host_async()
+            return [DmaTicket(h, "d2h", nb, prefetched)
+                    for h, nb in zip(host_bufs, sizes)]
+        bufs = jax.device_put(list(host_bufs), device)
+        return [DmaTicket(b, direction, nb, prefetched)
+                for b, nb in zip(bufs, sizes)]
 
     def dispatch_compute(op, srcs, attrs):
         d._count("dispatch")
@@ -138,7 +351,9 @@ def make_eager_driver(device: Optional[jax.Device] = None) -> HalDriver:
 
     d = HalDriver("eager_cpu", alloc, free, bind_const, initiate_dma,
                   wait_dma, dispatch_compute, collective, fence, poll, donate,
-                  link_compute=link_compute)
+                  link_compute=link_compute, dma_async=dma_async,
+                  dma_wait=dma_wait_, dma_async_batch=dma_async_batch,
+                  arena=arena)
     return d
 
 
@@ -166,6 +381,18 @@ def make_trace_driver() -> HalDriver:
     def wait_dma(buf):
         return buf                                  # no sync under trace
 
+    def dma_async(host_buf, direction, prefetched=False):
+        # symbolic ticket: the staged program IS the overlap (XLA schedules
+        # transfers and compute from one dataflow graph)
+        return DmaTicket(jnp.asarray(host_buf), direction, 0, prefetched)
+
+    def dma_wait_(ticket):
+        return ticket.buf
+
+    def dma_async_batch(host_bufs, direction, prefetched=False):
+        return [DmaTicket(jnp.asarray(h), direction, 0, prefetched)
+                for h in host_bufs]
+
     def dispatch_compute(op, srcs, attrs):
         d._count("dispatch")
         return oplib.compute(op, srcs, attrs)       # stays symbolic
@@ -190,5 +417,6 @@ def make_trace_driver() -> HalDriver:
 
     d = HalDriver("trace_xla", alloc, free, bind_const, initiate_dma,
                   wait_dma, dispatch_compute, collective, fence, poll, donate,
-                  link_compute=link_compute)
+                  link_compute=link_compute, dma_async=dma_async,
+                  dma_wait=dma_wait_, dma_async_batch=dma_async_batch)
     return d

@@ -25,6 +25,7 @@ import io
 import json
 import pathlib
 import struct
+import weakref
 import zlib
 from typing import Mapping, Optional, Union
 
@@ -106,6 +107,8 @@ class RIMFS:
         if len(index) != n:
             raise RIMFSError("index length mismatch")
         self._index = {e["name"]: e for e in index}
+        # per-driver residency cache: id -> (weakref(driver), ResidentImage)
+        self._resident: dict[int, tuple] = {}
 
     # ------------------------------------------------------------------ api
     def files(self) -> list:
@@ -146,6 +149,35 @@ class RIMFS:
             raise RIMFSError("image CRC mismatch")
         return True
 
+    def resident(self, driver, names: Optional[list] = None
+                 ) -> "ResidentImage":
+        """Device residency (zero re-upload): pin files into the driver's
+        arena ONCE and serve the device buffers from then on.
+
+        The upload consumes the same zero-copy host views ``read`` serves
+        (``address_of`` gives each file's stable host "physical address"),
+        so nothing is copied host-side; subsequent ``resident`` calls for
+        the same driver — e.g. every RBL re-bind, every new
+        ``ServingEngine`` over this image — return the cached
+        ``ResidentImage`` and move zero bytes (asserted against the
+        driver's DMA counters in tests/benchmarks). ``names`` restricts
+        pinning to the files a program actually uses; later calls extend
+        the pinned set incrementally (already-pinned files never move
+        again). Cache entries for garbage-collected drivers are pruned —
+        a dead driver's weight copy is not kept alive by this cache.
+        """
+        for key, (ref, _) in list(self._resident.items()):
+            if ref() is None:                     # driver was collected
+                del self._resident[key]
+        entry = self._resident.get(id(driver))
+        if entry is not None and entry[0]() is driver:
+            ri = entry[1]
+            ri.extend(names if names is not None else self.files())
+            return ri
+        ri = ResidentImage(self, driver, names)
+        self._resident[id(driver)] = (weakref.ref(driver), ri)
+        return ri
+
     def total_bytes(self) -> int:
         return len(self._data)
 
@@ -154,6 +186,102 @@ class RIMFS:
         memory overhead' the paper compares against OS file systems."""
         payload = sum(e["nbytes"] for e in self._index.values())
         return self.total_bytes() - payload
+
+
+class ResidentImage:
+    """Weight files pinned device-side, offset-registered in the driver's
+    arena. Built once per (image, driver) pair by ``RIMFS.resident`` and
+    extended incrementally as later binds request more files.
+
+    The upload is split-phase when the driver has async DMA slots: every
+    file's transfer is ISSUED before any is WAITED on (one batched
+    descriptor when the driver supports it), so uploads overlap each
+    other instead of paying one host round-trip per file. The driver is
+    held by weakref: the cache never outlives the backend it pinned into.
+    """
+
+    def __init__(self, fs: RIMFS, driver, names: Optional[list] = None):
+        self.fs = fs
+        self._driver_ref = weakref.ref(driver)
+        self._host_views: dict[str, np.ndarray] = {}
+        self._offsets: dict[str, int] = {}
+        self._bufs: dict[str, object] = {}
+        self.extend(names if names is not None else fs.files())
+
+    @property
+    def driver(self):
+        return self._driver_ref()
+
+    def extend(self, names) -> None:
+        """Pin any not-yet-resident files (already-pinned ones never
+        re-upload; the DMA counters do not move for them)."""
+        order = [n for n in names if n not in self._bufs]
+        if not order:
+            return
+        driver = self.driver
+        if driver is None:
+            raise RIMFSError("resident image's driver was collected")
+        for name in order:
+            view = self.fs.read(name)          # zero-copy view of the image
+            self._host_views[name] = view
+            if getattr(driver, "arena", None) is not None:
+                self._offsets[name] = driver.arena.alloc(view.nbytes)
+        if getattr(driver, "dma_async_batch", None) is not None:
+            # the whole file set under one batched issue
+            tickets = driver.dma_async_batch(
+                [self._host_views[n] for n in order], "h2d")
+            for name, t in zip(order, tickets):
+                self._bufs[name] = driver.dma_wait(t)
+        elif getattr(driver, "dma_async", None) is not None:
+            tickets = {n: driver.dma_async(self._host_views[n], "h2d")
+                       for n in order}
+            for name, t in tickets.items():    # redeem after ALL issues
+                self._bufs[name] = driver.dma_wait(t)
+        else:
+            for name in order:
+                self._bufs[name] = driver.initiate_dma(
+                    self._host_views[name], "h2d")
+
+    # ---------------------------------------------------------------- api
+    def files(self) -> list:
+        return list(self._bufs)
+
+    def buffer(self, name: str):
+        """The pinned device buffer for one file."""
+        return self._bufs[name]
+
+    __getitem__ = buffer
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._bufs
+
+    def buffers(self) -> dict:
+        return dict(self._bufs)
+
+    def host_view(self, name: str) -> np.ndarray:
+        """The zero-copy host view the upload consumed (aliases the
+        mounted image — tested, not assumed)."""
+        return self._host_views[name]
+
+    def offset_of(self, name: str) -> Optional[int]:
+        """Arena offset of the pinned range (None without an arena)."""
+        return self._offsets.get(name)
+
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self._host_views.values())
+
+    def unpin(self) -> None:
+        """Release the arena ranges and drop the buffer table."""
+        driver = self.driver
+        arena = getattr(driver, "arena", None) if driver is not None \
+            else None
+        if arena is not None:
+            for off in self._offsets.values():
+                arena.free(off)
+        self._offsets.clear()
+        self._bufs.clear()
+        if driver is not None:
+            self.fs._resident.pop(id(driver), None)
 
 
 def mount(data: Union[bytes, bytearray, memoryview]) -> RIMFS:

@@ -68,9 +68,23 @@ class Telemetry:
     def __init__(self, capacity: int = 65536):
         self._lat: collections.deque = collections.deque(maxlen=capacity)
         self._metrics: collections.deque = collections.deque(maxlen=capacity)
+        self.bytes_moved = 0
+        self.bytes_overlapped = 0
 
     def record_latency(self, seconds: float) -> None:
         self._lat.append(seconds)
+
+    def record_dma(self, bytes_moved: int, bytes_overlapped: int = 0) -> None:
+        """Data-movement accounting from the residency plan: total DMA
+        payload vs the split-phase share that overlapped compute (the
+        paper's 3-7x data-movement story, DESIGN.md §6)."""
+        self.bytes_moved += int(bytes_moved)
+        self.bytes_overlapped += int(bytes_overlapped)
+
+    def dma_summary(self) -> dict:
+        moved, over = self.bytes_moved, self.bytes_overlapped
+        return {"bytes_moved": moved, "bytes_overlapped": over,
+                "overlap_fraction": over / moved if moved else 0.0}
 
     def record(self, **metrics) -> None:
         self._metrics.append(dict(metrics, t=time.time()))
@@ -158,6 +172,10 @@ class Platform:
         self._ready_at: Optional[float] = None
         self.events.register("rcb_complete",
                              lambda p: self.telemetry.record(**p))
+        self.events.register(
+            "dma_complete",
+            lambda p: self.telemetry.record_dma(
+                p.get("bytes_moved", 0), p.get("bytes_overlapped", 0)))
 
     # ------------------------------------------------------------ provision
     def provision(self, image: Optional[bytes] = None,

@@ -18,10 +18,40 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import rctc
+from repro.core import rimfs as rimfs_mod
 from repro.core.rtpm import Telemetry
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import transformer as tf
-from repro.models.common import init_params
+from repro.models.common import init_params, is_spec
+
+
+def pack_params_image(params) -> bytes:
+    """Flatten a params pytree into a RIMFS image (one file per leaf,
+    checkpoint-compatible key naming)."""
+    from repro.checkpoint.ckpt import _flatten
+    return rimfs_mod.pack(_flatten(params))
+
+
+def params_from_rimfs(cfg: ModelConfig, fs: rimfs_mod.RIMFS, driver=None):
+    """Rebuild the params pytree from a mounted RIMFS image.
+
+    With a ``driver``, leaves resolve through the image's per-driver
+    residency cache (``RIMFS.resident``): the first call uploads every
+    weight ONCE into the driver's arena; later calls — e.g. constructing a
+    second ``ServingEngine`` over the same image — reuse the pinned device
+    buffers and perform zero re-uploads (the driver's DMA counters do not
+    move). Without a driver, leaves are zero-copy host views.
+    """
+    specs = tf.model_specs(cfg)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec)
+    resident = fs.resident(driver) if driver is not None else None
+    out = []
+    for path, spec in leaves:
+        key = jax.tree_util.keystr(path)
+        buf = resident[key] if resident is not None else fs.read(key)
+        out.append(jnp.asarray(buf))
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 @dataclasses.dataclass
@@ -37,12 +67,13 @@ class ServingEngine:
     """Fixed-slot continuous batching (decode batch = n_slots)."""
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_seq: int = 256, greedy: bool = True):
+                 max_seq: int = 256, greedy: bool = True, scheduler=None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.greedy = greedy
+        self.scheduler = scheduler      # optional DeadlineScheduler
         self.telemetry = Telemetry()
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
@@ -54,6 +85,16 @@ class ServingEngine:
         # The RCB program view of this service (paper-faithful packaging).
         self.program = rctc.compile_lm_service(
             cfg, max_batch, max_seq, self._prefill, self._decode)
+
+    @classmethod
+    def from_rimfs(cls, cfg: ModelConfig, fs: rimfs_mod.RIMFS, driver=None,
+                   **kwargs) -> "ServingEngine":
+        """Provision an engine straight from a RIMFS weight image.
+
+        Weights resolve through ``RIMFS.resident(driver)``: repeated
+        engine construction over the same image re-binds the pinned device
+        buffers instead of re-uploading (zero additional DMA)."""
+        return cls(cfg, params_from_rimfs(cfg, fs, driver), **kwargs)
 
     # ----------------------------------------------------------------- api
     def submit(self, req: Request) -> None:
@@ -97,7 +138,13 @@ class ServingEngine:
             self.params, self._cache,
             {"inputs": jnp.asarray(toks), "pos": jnp.asarray(self._pos)})
         logits.block_until_ready()
-        self.telemetry.record_latency(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        self.telemetry.record_latency(dt)
+        if self.scheduler is not None:
+            # feed the admission policy's EWMA with REAL decode latencies
+            # (eta/shedding decisions track the measured step cost, not the
+            # constructor default)
+            self.scheduler.observe_step_latency(dt)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
         for i in live:
             r = self._slots[i]

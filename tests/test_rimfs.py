@@ -1,4 +1,5 @@
-"""RIMFS: zero-copy semantics, alignment, CRC integrity, image roundtrip."""
+"""RIMFS: zero-copy semantics, alignment, CRC integrity, image roundtrip,
+device residency (pin-once, zero re-upload)."""
 import numpy as np
 import pytest
 try:
@@ -7,7 +8,7 @@ try:
 except ImportError:                       # optional test dependency
     _HAS_HYPOTHESIS = False
 
-from repro.core import rimfs
+from repro.core import rhal, rimfs
 
 
 def test_pack_mount_roundtrip(rng):
@@ -60,6 +61,79 @@ def test_mount_file_mmap(tmp_path, rng):
     fs = rimfs.mount_file(tmp_path / "img.rimfs")
     np.testing.assert_array_equal(fs.read("w"), w)
     assert fs.verify()
+
+
+def test_resident_views_alias_image_no_copy(rng):
+    """The round-trip property: the host views the resident upload consumed
+    ARE views of the mounted image bytes — no staging copy anywhere."""
+    w = rng.randn(64, 64).astype(np.float32)
+    img = rimfs.pack({"w": w})
+    fs = rimfs.mount(img)
+    drv = rhal.make_eager_driver()
+    ri = fs.resident(drv)
+    view = ri.host_view("w")
+    assert np.shares_memory(view, np.frombuffer(img, np.uint8))
+    np.testing.assert_array_equal(view, w)
+    # the uploaded device buffer round-trips the same bits
+    np.testing.assert_array_equal(np.asarray(ri["w"]), w)
+    # and its offset comes from address_of's aligned placement
+    off, nbytes = fs.address_of("w")
+    assert off % rimfs.ALIGN == 0 and nbytes == w.nbytes
+
+
+def test_resident_is_pinned_once_per_driver(rng):
+    files = {f"w{i}": rng.randn(32, 32).astype(np.float32)
+             for i in range(4)}
+    fs = rimfs.mount(rimfs.pack(files))
+    drv = rhal.make_eager_driver(debug_arena=True)
+    ri1 = fs.resident(drv)
+    moved = drv.stats.get("dma_bytes", 0)
+    assert moved == sum(v.nbytes for v in files.values())
+    pinned = drv.arena.bytes_in_use
+    # second resident call: same object, zero additional DMA, zero arena
+    ri2 = fs.resident(drv)
+    assert ri2 is ri1
+    assert drv.stats.get("dma_bytes", 0) == moved
+    assert drv.arena.bytes_in_use == pinned
+    # a different driver gets its own pinning
+    drv2 = rhal.make_eager_driver()
+    fs.resident(drv2)
+    assert drv2.stats.get("dma_bytes", 0) == moved
+    # unpin releases the arena ranges and invalidates the cache entry
+    ri1.unpin()
+    assert drv.arena.bytes_in_use == pinned - moved
+    assert fs.resident(drv) is not ri1
+
+
+def test_resident_pins_subset_and_extends(rng):
+    """bind-style subset pinning: only requested files upload; later
+    requests extend incrementally; already-pinned files never re-move."""
+    files = {f"w{i}": rng.randn(16, 16).astype(np.float32)
+             for i in range(3)}
+    fs = rimfs.mount(rimfs.pack(files))
+    drv = rhal.make_eager_driver()
+    ri = fs.resident(drv, names=["w0"])
+    assert ri.files() == ["w0"]
+    assert drv.stats.get("dma_bytes", 0) == files["w0"].nbytes
+    ri2 = fs.resident(drv, names=["w0", "w2"])       # extend
+    assert ri2 is ri and sorted(ri.files()) == ["w0", "w2"]
+    assert drv.stats["dma_bytes"] == files["w0"].nbytes \
+        + files["w2"].nbytes
+
+
+def test_resident_cache_drops_dead_drivers(rng):
+    """The per-driver cache must not keep a collected driver's weight
+    copy alive (elasticity churn creates many short-lived drivers)."""
+    import gc
+    fs = rimfs.mount(rimfs.pack({"w": rng.randn(8).astype(np.float32)}))
+    drv = rhal.make_eager_driver()
+    fs.resident(drv)
+    assert len(fs._resident) == 1
+    del drv
+    gc.collect()
+    drv2 = rhal.make_eager_driver()
+    fs.resident(drv2)                     # prunes the dead entry
+    assert len(fs._resident) == 1
 
 
 def test_overhead_small(rng):

@@ -6,12 +6,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import rctc, rimfs
+from repro.core import rctc, rhal, rimfs
 from repro.models import resnet as rn
 from repro.models import transformer as tf
 from repro.models.common import init_params
 from repro.serving import protocol as proto
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import (Request, ServingEngine, pack_params_image,
+                                  params_from_rimfs)
+from repro.serving.scheduler import DeadlineScheduler
 from repro.serving.server import Client, InferenceServer
 
 
@@ -79,6 +81,63 @@ def test_lm_engine_batched_requests(rng):
     assert all(r.done for r in reqs)
     assert all(len(r.out_tokens) >= 4 for r in reqs)
     assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
+
+
+def test_engine_feeds_scheduler_latency_ewma(rng):
+    """The admission policy's EWMA must track REAL decode latencies, not
+    the constructor default (eta/shedding ran on 1e-2 forever)."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    sched = DeadlineScheduler(step_latency_estimate=123.0)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                        scheduler=sched)
+    eng.submit(Request(rid=0, prompt=rng.randint(
+        0, cfg.vocab_size, (4,)).astype(np.int32), max_new=3))
+    eng.run_until_drained()
+    # EWMA moved off the seed value toward measured step latency (which is
+    # far below 123 s on any machine)
+    assert sched.est < 123.0
+    assert sched.est > 0.0
+
+
+def test_engine_from_rimfs_zero_reupload(rng):
+    """Repeated engine construction over one RIMFS image re-binds pinned
+    weights: the driver's DMA counters must not move the second time."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    img = pack_params_image(params)
+    fs = rimfs.mount(img)
+    drv = rhal.make_eager_driver()
+    eng1 = ServingEngine.from_rimfs(cfg, fs, driver=drv, max_batch=2,
+                                    max_seq=64)
+    uploaded = drv.stats.get("dma_bytes", 0)
+    assert uploaded > 0
+    snapshot = dict(drv.stats)
+    eng2 = ServingEngine.from_rimfs(cfg, fs, driver=drv, max_batch=2,
+                                    max_seq=64)
+    for key in ("dma", "dma_async", "dma_bytes"):
+        assert drv.stats.get(key, 0) == snapshot.get(key, 0), key
+    # both engines decode identically from the shared pinned weights
+    prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+    r1 = Request(rid=0, prompt=prompt, max_new=3)
+    r2 = Request(rid=1, prompt=prompt, max_new=3)
+    eng1.submit(r1)
+    eng2.submit(r2)
+    eng1.run_until_drained()
+    eng2.run_until_drained()
+    assert r1.out_tokens == r2.out_tokens
+
+
+def test_params_rimfs_roundtrip_matches(rng):
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    fs = rimfs.mount(pack_params_image(params))
+    back = params_from_rimfs(cfg, fs)
+    flat_a = jax.tree_util.tree_leaves(params)
+    flat_b = jax.tree_util.tree_leaves(back)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_lm_engine_matches_offline_decode(rng):
