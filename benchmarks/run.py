@@ -426,6 +426,65 @@ def table3_resnet_inference(rng=None, iters: int = 200) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Partitioned multi-tile scaling (paper Fig 3: tile-array deployment)
+# ---------------------------------------------------------------------------
+
+def partition_scaling_bench(rng=None, iters: int = 10) -> None:
+    """Throughput-per-tile scaling: ResNet-18 cut into 1/2/4/8 tile-group
+    stages pipelined over a TileMesh, vs the single-device linked path.
+
+    On this box every tile group is modeled on the same host device, so
+    per-tile throughput is NOT expected to scale up — the table's job is
+    to account the cost side of the paper's multi-tile story: cut-edge
+    count, inter-tile movement bytes per execution (per directed edge),
+    and per-group arena high-water, with bit-identical outputs as the
+    gate."""
+    rng = rng or np.random.RandomState(0)
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params), batch=1)
+    fs = rimfs.mount(image)
+    x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
+    ex = Executor()
+
+    bound_l = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    t_single = min(_time(lambda: jax.block_until_ready(
+        ex.run(bound_l)["output"]), iters))
+    ref = np.asarray(jax.block_until_ready(ex.run(bound_l)["output"]))
+    emit("partition/single_linked", t_single * 1e6,
+         f"throughput={1/t_single:.1f}/s (the 1-device baseline)")
+
+    for n_groups in (1, 2, 4, 8):
+        mesh = rhal.TileMesh(n_groups)
+        bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+        out = ex.run_partitioned(bound, rimfs=fs, mesh=mesh)   # warm/link
+        identical = np.array_equal(
+            ref, np.asarray(jax.block_until_ready(out["output"])))
+        before = mesh.moved_bytes()
+        ex.run_partitioned(bound, rimfs=fs, mesh=mesh)
+        per_exec = mesh.moved_bytes() - before
+        t_p = min(_time(lambda: jax.block_until_ready(
+            ex.run_partitioned(bound, rimfs=fs, mesh=mesh)["output"]),
+            iters))
+        part = bound._partitions[mesh.n_groups]
+        per_edge = sorted(
+            (f"{s}->{d}:{st['bytes'] // st['transfers']}B"
+             for (s, d), st in mesh.edge_stats.items()), )
+        plans = [t.residency(mesh.group(t.gid).driver)
+                 for t in part.tiles]
+        high = max((p.high_water for p in plans if p is not None),
+                   default=0)
+        thpt = 1 / t_p
+        emit(f"partition/groups_{n_groups}", t_p * 1e6,
+             f"thpt={thpt:.1f}/s per_tile={thpt / n_groups:.1f}/s "
+             f"vs_single={thpt * t_single:.2f}x; "
+             f"cut_edges={len(part.edges)} moved_per_exec={per_exec}B "
+             f"[{','.join(per_edge) or 'none'}]; "
+             f"max_group_high_water={high}B; bit_identical={identical}")
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernels (interpret mode — correctness-path timing only)
 # ---------------------------------------------------------------------------
 
@@ -540,6 +599,7 @@ def main() -> None:
     table1_transfer_overhead(total_mb=1.0 if quick else 4.0)
     table45_kernel_breakdowns()
     table4_dma_pipeline(iters=10 if quick else 25)
+    partition_scaling_bench(iters=5 if quick else 10)
     residency_reuse_bench()
     table2_resource_utilization()
     table3_resnet_inference(iters=50 if quick else 200)

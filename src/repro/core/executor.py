@@ -17,9 +17,14 @@ comparison on TPU terms:
     the trace driver, collapsing the whole RCB stream into one XLA
     executable (the baremetal analogue: one dispatch per step, zero host
     round-trips inside).
+  * ``partitioned`` — the program is cut into per-tile-group stages
+    (core/partition.py) and pipelined over a ``TileMesh`` of independent
+    drivers, cut-edge activations streaming split-phase between groups
+    (the paper's multi-tile AIE-array deployment shape).
 
 Equivalence of the modes over the whole op vocabulary is enforced by
-tests/test_executor.py and tests/test_linker.py — the paper's "same RCBs
+tests/test_executor.py, tests/test_linker.py and the differential
+conformance matrix in tests/test_conformance.py — the paper's "same RCBs
 drive different execution environments" portability property.
 """
 from __future__ import annotations
@@ -305,6 +310,35 @@ class Executor:
 
         donate = (1,) if donate_weights else ()
         return jax.jit(staged, donate_argnums=donate)
+
+    # --------------------------------------------------------- partitioned
+    def run_partitioned(self, bound: BoundProgram,
+                        inputs: Optional[dict] = None, rimfs=None,
+                        mesh=None, n_groups: int = 2,
+                        platform=None) -> dict:
+        """Execute over a tile mesh: the program is cut into per-group
+        stages (core/partition.py), each stage runs linked on its own
+        group's driver, and cut-edge tensors stream split-phase between
+        groups — stage *k*'s activations move while stage *k+1* sets up.
+
+        ``mesh`` defaults to a fresh ``TileMesh(n_groups)``; a
+        ``platform`` (rtpm.Platform) adds heartbeat-monitored workers and
+        stage re-queue on tile failure. The partition is cached on the
+        BoundProgram per group count, so repeated executions re-cut
+        nothing.
+        """
+        from repro.core import partition as partition_mod
+        if mesh is None:
+            mesh = rhal_mod.TileMesh(n_groups)
+        cache = getattr(bound, "_partitions", None)
+        if cache is None:
+            cache = bound._partitions = {}
+        part = cache.get(mesh.n_groups)
+        if part is None:
+            part = cache[mesh.n_groups] = partition_mod.partition(
+                bound, mesh.n_groups)
+        return partition_mod.execute(part, mesh, inputs=inputs,
+                                     rimfs=rimfs, platform=platform)
 
     # ------------------------------------------------------------- helpers
     def weights_from(self, bound: BoundProgram) -> dict:

@@ -31,6 +31,7 @@ DESIGN.md §4 and §6 have the full contract.
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Any, Callable, Optional
 
 from repro.core import rbl as rbl_mod
@@ -395,7 +396,15 @@ def link(bound: rbl_mod.BoundProgram, driver,
                     _p(slots[_s] if _s is not None else None)
             else:                                  # compute dispatch
                 if link_compute is not None:
-                    handler = link_compute(kind, attrs)
+                    # (opcode, attrs) sites repeat across layers, tiles of
+                    # a partitioned program, and re-links after elasticity
+                    # events — resolve each distinct site ONCE per driver
+                    key = (int(kind), json.dumps(attrs, sort_keys=True,
+                                                 default=repr))
+                    handler = driver.link_cache.get(key)
+                    if handler is None:
+                        handler = link_compute(kind, attrs)
+                        driver.link_cache[key] = handler
                     # specialized handlers bypass dispatch_compute, so the
                     # executor bulk-updates the driver's dispatch stat;
                     # the fallback below counts itself per call

@@ -1,0 +1,366 @@
+"""Partitioned multi-tile execution — the paper's array-of-tiles shape.
+
+The paper's efficiency claim is a *multi-tile* claim: ResNet-18 runs over a
+28-tile AIE array with RTPM orchestrating tile groups, each group owning a
+contiguous run of layers and streaming its boundary activations to the next
+group over the interconnect. This pass reproduces that deployment shape on
+RHAL terms (DESIGN.md §7):
+
+  * ``partition`` cuts a bound program into per-tile-group ``TileProgram``s
+    at layer granularity — RCB block boundaries when the program has enough
+    blocks, balanced linear-op splits otherwise. Cut analysis runs over the
+    same linear def/read stream the RBL liveness machinery walks: a symbol
+    defined in group *f* and read in group *g* > *f* is a **cut edge**, and
+    becomes an output of *f*'s subprogram and an input of *g*'s.
+  * Each ``TileProgram`` is a complete, self-validating ``RCBProgram`` —
+    binding it against a tile group's driver reuses the whole existing
+    stack unchanged: RIMFS residency pins only that group's weights into
+    that group's arena, and linking yields the group's own static
+    ``ResidencyPlan`` (per-group arena offsets, high-water, prefetch/drain
+    schedule).
+  * ``execute`` drives the pipelined schedule over a ``TileMesh``: when
+    stage *k* completes on group *g*, every cut-edge tensor it produced is
+    issued split-phase toward its consumer groups (``TileMesh.stream``),
+    and the ticket is redeemed only when the consuming stage starts — so
+    group *g−1*'s activation stream rides under group *g*'s compute. With
+    an RTPM ``Platform`` attached, every group is a heartbeat-monitored
+    worker and a failed stage re-queues on a surviving group (re-binding
+    the same control stream against the survivor's driver — control-as-data
+    elasticity, paper §5.2).
+
+Differential conformance across run_interpreted / run / fuse /
+run_partitioned — bit-identical outputs at every tile-group count — is
+enforced by tests/test_conformance.py.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import weakref
+from typing import Any, Optional
+
+from repro.core import rbl as rbl_mod
+from repro.core import rhal as rhal_mod
+from repro.core.rcb import Op, RCB, RCBProgram, TensorDesc
+from repro.core.rhal import DmaTicket, TileFailure, TileMesh, _nbytes_of
+
+
+# Per-tile bind cache bound: a tile legitimately binds against its own
+# group's driver plus (during failover) a few survivors — anything past
+# this is a discarded mesh whose buffers must not be retained.
+_BIND_CACHE_CAP = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class CutEdge:
+    """One cut-edge tensor: produced by group ``src``, consumed by group
+    ``dst``; ``nbytes`` is the per-execution movement this edge costs."""
+    sym: str
+    src: int
+    dst: int
+    nbytes: int
+
+
+@dataclasses.dataclass
+class TileProgram:
+    """One tile group's slice of the workload.
+
+    ``program`` is a standalone RCBProgram: cut-in symbols are re-kinded
+    ``input`` (they arrive over inter-tile DMA), cut-out symbols ``output``
+    (they stay live to stage exit so the mesh can stream them). Binding is
+    cached per driver, so repeated executions re-link nothing.
+    """
+    gid: int
+    program: RCBProgram
+    cut_ins: tuple            # symbols arriving over inter-tile streams
+    cut_outs: tuple           # symbols streamed to later groups
+    input_syms: tuple         # global input symbols this tile consumes
+    output_syms: tuple        # global output symbols this tile defines
+    weight_syms: tuple
+    _bound: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def bind(self, driver, rimfs=None,
+             weights: Optional[dict] = None) -> rbl_mod.BoundProgram:
+        """Bind (and cache) against one tile group's driver — weights pin
+        into THAT group's arena via the RIMFS residency cache, or resolve
+        from ``weights`` (the original bind's buffers) without an image."""
+        entry = self._bound.get(id(driver))
+        if entry is not None and entry[0]() is driver:
+            return entry[1]
+        # The cached BoundProgram's linked form holds its driver strongly,
+        # so dead-driver weakrefs can't fire — bound FIFO eviction keeps
+        # a long elasticity run (fresh mesh per failure) from retaining
+        # every discarded mesh's buffers. Re-binding an evicted driver is
+        # pure resolution, so eviction never affects results.
+        while len(self._bound) >= _BIND_CACHE_CAP:
+            self._bound.pop(next(iter(self._bound)))
+        bound = rbl_mod.bind(self.program, rimfs=rimfs, driver=driver,
+                             weights=weights)
+        self._bound[id(driver)] = (weakref.ref(driver), bound)
+        return bound
+
+    def residency(self, driver):
+        """The group's static ResidencyPlan, once linked (None before)."""
+        entry = self._bound.get(id(driver))
+        linked = getattr(entry[1], "_linked", None) if entry else None
+        return linked.residency if linked is not None else None
+
+
+@dataclasses.dataclass
+class PartitionedProgram:
+    """The partition: ordered tile programs + the cut-edge tensor table."""
+    bound: rbl_mod.BoundProgram        # the original single-device binding
+    tiles: list                        # list[TileProgram], stage order
+    edges: tuple                       # tuple[CutEdge]
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.tiles)
+
+    def edges_from(self, gid: int) -> list:
+        return [e for e in self.edges if e.src == gid]
+
+    def cut_bytes(self) -> int:
+        """Planned inter-tile movement per execution (sum over edges)."""
+        return sum(e.nbytes for e in self.edges)
+
+
+# ---------------------------------------------------------------------------
+# Cut-point selection
+# ---------------------------------------------------------------------------
+
+def _contiguous_split(weights: list, k: int) -> list:
+    """Balanced contiguous split of ``weights`` into <= k non-empty runs."""
+    n = len(weights)
+    k = max(1, min(k, n))
+    prefix = [0]
+    for w in weights:
+        prefix.append(prefix[-1] + w)
+    total = prefix[-1]
+    cuts = [0]
+    for g in range(1, k):
+        ideal = total * g / k
+        j = bisect.bisect_left(prefix, ideal)
+        j = max(j, cuts[-1] + 1)           # every group stays non-empty
+        j = min(j, n - (k - g))            # leave room for the rest
+        cuts.append(j)
+    cuts.append(n)
+    return [(cuts[i], cuts[i + 1]) for i in range(len(cuts) - 1)]
+
+
+def _reads(op) -> tuple:
+    """Symbols an op consumes. FREE's dst is a *read* for cut purposes:
+    the op needs the live buffer (to return its range), it defines
+    nothing."""
+    return op.srcs + (op.dsts if op.op is Op.FREE else ())
+
+
+def _defs(op) -> tuple:
+    return () if op.op is Op.FREE else op.dsts
+
+
+def _group_blocks(prog: RCBProgram, n_groups: int) -> list:
+    """Per-group block lists: layer-granularity cuts at RCB block
+    boundaries when the program has enough blocks, balanced linear-op
+    splits (re-blocked as one "partition" RCB per group) otherwise."""
+    if len(prog.blocks) >= n_groups:
+        spans = _contiguous_split([len(b.ops) for b in prog.blocks],
+                                  n_groups)
+        out = []
+        for start, end in spans:
+            group = prog.blocks[start:end]
+            ids = {b.block_id for b in group}
+            out.append([dataclasses.replace(
+                b, deps=tuple(d for d in b.deps if d in ids))
+                for b in group])
+        return out
+    flat = [op for b in prog.blocks for op in b.ops]
+    spans = _contiguous_split([1] * len(flat), n_groups)
+    return [[RCB(g, "partition", (), tuple(flat[start:end]))]
+            for g, (start, end) in enumerate(spans)]
+
+
+# ---------------------------------------------------------------------------
+# The partition pass
+# ---------------------------------------------------------------------------
+
+def partition(bound: rbl_mod.BoundProgram,
+              n_groups: int) -> PartitionedProgram:
+    """Split a bound program into ``n_groups`` tile-group stages.
+
+    Cuts are contiguous over the linear op stream, so every cross-group
+    data dependency points forward: the producing group marks the symbol
+    an output, every consuming group an input, and the pair becomes a
+    ``CutEdge`` in the movement table. A symbol redefined across the cut
+    (e.g. a recurrent cache) edges from its *latest* producer — the scan
+    below tracks the last defining group per symbol, exactly the liveness
+    walk RBL's interval analysis performs.
+    """
+    prog = bound.program
+    groups = _group_blocks(prog, max(1, int(n_groups)))
+    n = len(groups)
+
+    group_ops = [[op for b in blocks for op in b.ops] for blocks in groups]
+    cut_ins: list = [set() for _ in range(n)]
+    cut_outs: list = [set() for _ in range(n)]
+    edge_set: dict = {}
+    last_def: dict = {}
+    for g, ops in enumerate(group_ops):
+        for op in ops:
+            for sym in _reads(op):
+                dg = last_def.get(sym)
+                if dg is not None and dg != g:
+                    cut_ins[g].add(sym)
+                    cut_outs[dg].add(sym)
+                    t = prog.tensors[sym]
+                    edge_set[(sym, dg, g)] = _nbytes_of(t.shape, t.dtype)
+            for sym in _defs(op):
+                last_def[sym] = g
+
+    tiles: list = []
+    for g, blocks in enumerate(groups):
+        ops = group_ops[g]
+        defs_g = {s for op in ops for s in _defs(op)}
+        syms = {s for op in ops for s in (*op.dsts, *op.srcs)}
+        tensors: dict = {}
+        for name in prog.tensors:              # keep original symtab order
+            if name not in syms:
+                continue
+            t = prog.tensors[name]
+            if t.kind == "weight":
+                kind = "weight"
+            elif name in cut_outs[g] or (t.kind == "output"
+                                         and name in defs_g):
+                kind = "output"
+            elif name in cut_ins[g] or t.kind == "input":
+                kind = "input"
+            else:
+                kind = t.kind
+            tensors[name] = t if t.kind == kind \
+                else dataclasses.replace(t, kind=kind)
+        sub = RCBProgram(f"{prog.name}.tile{g}", tensors, blocks,
+                         dict(prog.artifacts))
+        sub.validate()
+        tiles.append(TileProgram(
+            gid=g, program=sub,
+            cut_ins=tuple(s for s in tensors if s in cut_ins[g]),
+            cut_outs=tuple(s for s in tensors if s in cut_outs[g]),
+            input_syms=tuple(s for s, t in tensors.items()
+                             if t.kind == "input" and s not in cut_ins[g]),
+            output_syms=tuple(s for s in tensors if s in defs_g
+                              and prog.tensors[s].kind == "output"),
+            weight_syms=tuple(s for s, t in tensors.items()
+                              if t.kind == "weight")))
+    edges = tuple(CutEdge(sym, src, dst, nb)
+                  for (sym, src, dst), nb in edge_set.items())
+    return PartitionedProgram(bound, tiles, edges)
+
+
+# ---------------------------------------------------------------------------
+# The pipelined schedule driver
+# ---------------------------------------------------------------------------
+
+def execute(part: PartitionedProgram, mesh: TileMesh,
+            inputs: Optional[dict] = None, rimfs=None,
+            platform=None) -> dict:
+    """Run the partitioned schedule over a tile mesh.
+
+    Stage *k* (tile group *k*) redeems its cut-in tickets, executes its
+    linked subprogram on its own driver, then issues its cut-out streams
+    split-phase — the issue returns immediately, so the transfer toward
+    group *k+1* overlaps whatever runs next. With a ``platform``, each
+    group is a heartbeat-monitored worker ("tile<g>"); a ``TileFailure``
+    triggers a liveness sweep (live groups answer the poll, the dead one
+    can't) and the stage re-queues on the first surviving group, re-bound
+    against that group's driver. Missing tickets after a failover are
+    re-streamed from the producer's retained buffer.
+    """
+    from repro.core.executor import Executor   # local: avoids import cycle
+    if mesh.n_groups < part.n_groups:
+        raise ValueError(f"mesh has {mesh.n_groups} groups, partition "
+                         f"needs {part.n_groups}")
+    feed = dict(part.bound.buffers)
+    if inputs:
+        feed.update(inputs)
+    for sym in part.bound.missing_inputs:
+        if sym not in feed:
+            raise ValueError(f"missing input {sym!r}")
+
+    hb = platform.heartbeats if platform is not None else None
+    if hb is not None:
+        for gid in mesh.gids:          # registration doubles as a poll:
+            if mesh.alive(gid):        # only responsive groups beat
+                hb.beat(f"tile{gid}", 0)
+            else:
+                hb.register_silent(f"tile{gid}")
+
+    env: dict = {}                 # cut-out sym -> producer's raw buffer
+    tickets: dict = {}             # (sym, dst_gid) -> in-flight ticket
+    outs: dict = {}
+    for stage_idx, tile in enumerate(part.tiles):
+        gid = tile.gid
+        tried: set = set()
+        while True:
+            group = mesh.group(gid)
+            try:
+                stage_in = {s: feed[s] for s in tile.input_syms
+                            if s in feed}
+                for sym in tile.cut_ins:
+                    t = tickets.pop((sym, gid), None)
+                    if t is None:              # failover: re-stream from
+                        src = next(           # the producer's buffer
+                            e.src for e in part.edges
+                            if e.sym == sym and e.dst == tile.gid)
+                        t = mesh.stream(sym, env[sym], src, gid)
+                    stage_in[sym] = group.driver.dma_wait(t) \
+                        if type(t) is DmaTicket else t
+                bound_t = tile.bind(
+                    group.driver, rimfs,
+                    # no image at hand: the original bind already
+                    # resolved the weights — reuse those buffers
+                    weights=None if rimfs is not None else
+                    {s: feed[s] for s in tile.weight_syms if s in feed})
+                result = Executor(driver=group.driver).run(
+                    bound_t, inputs=stage_in)
+                break
+            except TileFailure:
+                tried.add(gid)
+                if platform is not None:
+                    # liveness sweep: live groups answer the poll, the
+                    # dead one cannot — the deadline policy judges
+                    for g2 in mesh.gids:
+                        if mesh.alive(g2):
+                            hb.beat(f"tile{g2}", stage_idx)
+                    verdict = hb.check()
+                    platform.post("worker_failed",
+                                  {"workers": verdict["failed"],
+                                   "stage": stage_idx})
+                survivors = [g2 for g2 in mesh.gids
+                             if mesh.alive(g2) and g2 not in tried]
+                if not survivors:
+                    raise
+                if platform is not None:
+                    platform.post("stage_requeued",
+                                  {"stage": stage_idx, "from": gid,
+                                   "to": survivors[0]})
+                gid = survivors[0]
+        for sym in tile.output_syms:
+            if sym in result:
+                outs[sym] = result[sym]
+        for edge in part.edges_from(tile.gid):
+            buf = result.get(edge.sym)
+            if buf is None:
+                continue
+            env[edge.sym] = buf                # retained for re-streams
+            if mesh.alive(edge.dst):
+                try:                           # issue NOW, redeem at use
+                    tickets[(edge.sym, edge.dst)] = mesh.stream(
+                        edge.sym, buf, gid, edge.dst)
+                except TileFailure:
+                    pass                       # consumer re-queues later
+        if hb is not None:
+            hb.beat(f"tile{gid}", stage_idx + 1)
+        if platform is not None:
+            platform.post("stage_complete",
+                          {"stage": stage_idx, "group": gid})
+    return outs

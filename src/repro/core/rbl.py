@@ -86,10 +86,17 @@ def bind(program: RCBProgram,
          rimfs: Optional[RIMFS] = None,
          inputs: Optional[dict] = None,
          driver=None,
-         verify_weights: bool = False) -> BoundProgram:
-    """Produce a fully resolved program (the paper's Binding phase)."""
+         verify_weights: bool = False,
+         weights: Optional[dict] = None) -> BoundProgram:
+    """Produce a fully resolved program (the paper's Binding phase).
+
+    ``weights`` supplies already-resolved weight buffers directly —
+    re-binding a slice of an earlier bind (e.g. a tile program of a
+    partitioned workload whose weights resolved at the original bind)
+    needs no image round-trip."""
     program.validate()
     inputs = inputs or {}
+    weights = weights or {}
     buffers: dict[str, Any] = {}
     missing = []
     # With a driver, weights resolve through the image's per-driver
@@ -102,17 +109,20 @@ def bind(program: RCBProgram,
     # byte is uploaded or cached.
     weight_names = [n for n, t in program.tensors.items()
                     if t.kind == "weight"]
+    unresolved = [n for n in weight_names if n not in weights]
     resident = None
-    if weight_names and rimfs is None:
-        raise ValueError(f"weight {weight_names[0]!r} needs a RIMFS image")
+    if unresolved and rimfs is None:
+        raise ValueError(f"weight {unresolved[0]!r} needs a RIMFS image")
     if verify_weights:
-        for name in weight_names:
+        for name in unresolved:
             rimfs.verify(name)
-    if driver is not None and rimfs is not None and weight_names:
-        resident = rimfs.resident(driver, names=weight_names)
+    if driver is not None and rimfs is not None and unresolved:
+        resident = rimfs.resident(driver, names=unresolved)
     for name, t in program.tensors.items():
         if t.kind == "weight":
-            if resident is not None:
+            if name in weights:
+                buffers[name] = weights[name]       # caller-resolved
+            elif resident is not None:
                 buffers[name] = resident[name]      # pinned device buffer
             else:
                 buffers[name] = rimfs.read(name)    # zero-copy host view

@@ -143,7 +143,8 @@ def compile_dma_pipeline(n_stages: int, n: int = 64, dtype="float32",
             b.emit(Op.DMA_D2H, [f"out{i}"], [acc])
         else:
             b.emit(Op.GEMM, [f"out{i}"], [f"in{i}", "b"])
-    b.emit(Op.FENCE)
+        b.close_block("transfer")      # one block per stage: the layer
+    b.emit(Op.FENCE)                   # granularity partition cuts at
     return b.build()
 
 
@@ -160,8 +161,40 @@ def compile_transfer_pipeline(n_blocks: int, floats: int,
         dev = b.scratch((floats,), dtype, f"dev{i}")
         b.emit(Op.DMA_H2D, [dev], [f"in{i}"])
         b.emit(Op.DMA_D2H, [f"out{i}"], [dev])
+        b.close_block("transfer")      # per-stage blocks (partition cuts)
     b.emit(Op.FENCE)
     return b.build()
+
+
+def compile_gemm_chain(depth: int, n: int = 32,
+                       dtype="float32") -> RCBProgram:
+    """``depth`` chained GEMM->RELU layers, one RCB block per layer — the
+    minimal multi-tile workload: every layer reads the previous layer's
+    activation, so every block boundary the partition pass cuts at becomes
+    a cut edge streamed over the tile mesh."""
+    b = _Builder(f"gemm_chain_{depth}")
+    b.tensor("input", (n, n), dtype, "input")
+    x = "input"
+    for i in range(depth):
+        w = b.tensor(f"w{i}", (n, n), dtype, "weight")
+        t = b.scratch((n, n), dtype, f"g{i}")
+        b.emit(Op.GEMM, [t], [x, w])
+        r = b.scratch((n, n), dtype, f"r{i}")
+        b.emit(Op.RELU, [r], [t])
+        x = r
+        b.close_block()
+    b.tensor("output", (n, n), dtype, "output")
+    b.emit(Op.PASSTHROUGH, ["output"], [x])
+    b.emit(Op.FENCE)
+    return b.build()
+
+
+def gemm_chain_weights(depth: int, n: int = 32, seed: int = 0) -> dict:
+    """Matching weight files for ``compile_gemm_chain`` (RIMFS image
+    payload; scaled to keep activations in a stable range)."""
+    rng = np.random.RandomState(seed)
+    return {f"w{i}": (rng.randn(n, n) / np.sqrt(n)).astype(np.float32)
+            for i in range(depth)}
 
 
 def compile_conv_relu_softmax(n=1, h=8, w=8, cin=3, cout=9) -> RCBProgram:

@@ -70,6 +70,15 @@ class ArenaError(RuntimeError):
     pass
 
 
+class DmaError(RuntimeError):
+    """Split-phase DMA protocol violation (e.g. a ticket redeemed twice)."""
+
+
+class TileFailure(RuntimeError):
+    """A tile group's hardware went away mid-program (fault injection /
+    elasticity). Raised by every vtable slot of a killed ``TileGroup``."""
+
+
 class DeviceArena:
     """Offset-based suballocator over one up-front device slab.
 
@@ -171,11 +180,24 @@ class DeviceArena:
 class DmaTicket:
     """Split-phase transfer handle: issued by ``dma_async``, redeemed by
     ``dma_wait``. ``prefetched`` marks issues the linker hoisted ahead of
-    the consuming op (the overlap-eligible bytes telemetry counts)."""
+    the consuming op (the overlap-eligible bytes telemetry counts).
+    ``redeemed`` is flipped by the first ``dma_wait`` — a second redemption
+    raises ``DmaError`` (on a raw-pointer backend the descriptor is recycled
+    at wait time, so a double wait would observe another transfer's state).
+    """
     buf: Any
     direction: str
     nbytes: int
     prefetched: bool = False
+    redeemed: bool = False
+
+    def redeem(self) -> None:
+        """Mark redemption; exactly-once is enforced, not assumed."""
+        if self.redeemed:
+            raise DmaError(
+                f"DmaTicket({self.direction}, {self.nbytes}B) redeemed "
+                f"twice — dma_wait already consumed this descriptor")
+        self.redeemed = True
 
 
 @dataclasses.dataclass
@@ -211,6 +233,11 @@ class HalDriver:
     dma_async_batch: Optional[Callable[[list, str], list]] = None
     # Optional device arena backing alloc/free and RIMFS residency.
     arena: Optional[DeviceArena] = None
+    # Per-driver compiled-handler memo (core/linker.py): identical
+    # (opcode, attrs) sites across links — e.g. every tile of a
+    # partitioned program — share ONE specialized handler instead of
+    # re-resolving/re-staging per link.
+    link_cache: dict = dataclasses.field(default_factory=dict)
 
     def _count(self, key: str, n: int = 1):
         self.stats[key] = self.stats.get(key, 0) + n
@@ -294,6 +321,7 @@ def make_eager_driver(device: Optional[jax.Device] = None,
 
     def dma_wait_(ticket):
         d._count("dma_ticket_wait")
+        ticket.redeem()                            # double-wait raises
         if ticket.direction == "d2h":
             return np.asarray(ticket.buf)          # materialize on host
         return ticket.buf                          # ordered by data flow
@@ -387,6 +415,7 @@ def make_trace_driver() -> HalDriver:
         return DmaTicket(jnp.asarray(host_buf), direction, 0, prefetched)
 
     def dma_wait_(ticket):
+        ticket.redeem()                            # double-wait raises
         return ticket.buf
 
     def dma_async_batch(host_bufs, direction, prefetched=False):
@@ -420,3 +449,129 @@ def make_trace_driver() -> HalDriver:
                   link_compute=link_compute, dma_async=dma_async,
                   dma_wait=dma_wait_, dma_async_batch=dma_async_batch)
     return d
+
+
+# ---------------------------------------------------------------------------
+# Tile mesh (multi-tile-group execution, DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+_GUARDED_SLOTS = ("alloc", "free", "bind_const", "initiate_dma", "wait_dma",
+                  "dispatch_compute", "collective", "fence", "poll",
+                  "dma_async", "dma_wait", "dma_async_batch")
+
+
+@dataclasses.dataclass
+class TileGroup:
+    """One tile group: an independent HalDriver (own arena, own DMA
+    engines, own stats) plus a liveness flag the mesh's fault model flips.
+    """
+    gid: int
+    driver: HalDriver
+    alive: bool = True
+
+
+def _guard_group(group: TileGroup) -> None:
+    """Wrap every vtable slot of the group's driver so a killed group
+    raises ``TileFailure`` at the next hardware touch — the modeled
+    analogue of a tile array segment dropping off the interconnect.
+    The liveness flag is read at CALL time, so programs linked before the
+    failure (including their per-site compiled handlers) fail too."""
+    driver = group.driver
+
+    def guard(fn):
+        def wrapped(*args, **kwargs):
+            if not group.alive:
+                raise TileFailure(f"tile group {group.gid} is down")
+            return fn(*args, **kwargs)
+        return wrapped
+
+    for slot in _GUARDED_SLOTS:
+        fn = getattr(driver, slot)
+        if fn is not None:
+            setattr(driver, slot, guard(fn))
+    link_compute = driver.link_compute
+    if link_compute is not None:
+        driver.link_compute = lambda op, attrs: guard(link_compute(op,
+                                                                   attrs))
+
+
+class TileMesh:
+    """N modeled tile-group drivers with inter-tile split-phase streams.
+
+    The paper runs ResNet-18 over a 28-tile AIE array with tile groups
+    pipelining layer stages; here each group is an independent RHAL driver
+    (own ``DeviceArena``, own DMA counters) and cut-edge activations move
+    between groups through split-phase ``DmaTicket`` streams — issued the
+    moment the producer stage completes, redeemed when the consumer stage
+    starts, so the transfer rides under whatever executes in between.
+    ``edge_stats`` accounts movement bytes per (src, dst) cut edge.
+    """
+
+    def __init__(self, n_groups: int, driver_factory=None,
+                 arena_bytes: int = DEFAULT_ARENA_BYTES):
+        if n_groups < 1:
+            raise ValueError(f"need >= 1 tile group, got {n_groups}")
+        factory = driver_factory or (
+            lambda gid: make_eager_driver(arena_bytes=arena_bytes))
+        self.groups: list[TileGroup] = []
+        for gid in range(n_groups):
+            group = TileGroup(gid, factory(gid))
+            _guard_group(group)
+            self.groups.append(group)
+        # (src_gid, dst_gid) -> {"bytes", "transfers", "syms"}
+        self.edge_stats: dict[tuple, dict] = {}
+
+    # ----------------------------------------------------------------- api
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def gids(self) -> range:
+        return range(len(self.groups))
+
+    def group(self, gid: int) -> TileGroup:
+        return self.groups[gid]
+
+    def alive(self, gid: int) -> bool:
+        return self.groups[gid].alive
+
+    def kill(self, gid: int) -> None:
+        """Fault injection: the group fails at its next hardware touch."""
+        self.groups[gid].alive = False
+
+    def revive(self, gid: int) -> None:
+        self.groups[gid].alive = True
+
+    @property
+    def primary(self) -> HalDriver:
+        """First live group's driver (weight residency / serving anchor)."""
+        for g in self.groups:
+            if g.alive:
+                return g.driver
+        raise TileFailure("no live tile group in mesh")
+
+    def stream(self, sym: str, buf, src_gid: int, dst_gid: int):
+        """Issue one cut-edge transfer src->dst, split-phase.
+
+        Returns a ``DmaTicket`` the consumer group redeems (``dma_wait``)
+        when its stage starts — or the transferred buffer directly when
+        the destination driver has no async DMA slots (blocking fallback).
+        Movement bytes are accounted per directed edge either way.
+        """
+        driver = self.groups[dst_gid].driver
+        if driver.dma_async is not None:
+            out = driver.dma_async(buf, "d2d", prefetched=True)
+        else:
+            out = driver.wait_dma(driver.initiate_dma(buf, "d2d"))
+        # account only issues that actually went out (a dead destination
+        # raises above — a phantom transfer must not inflate the edge)
+        st = self.edge_stats.setdefault(
+            (src_gid, dst_gid), {"bytes": 0, "transfers": 0, "syms": set()})
+        st["bytes"] += int(getattr(buf, "nbytes", 0))
+        st["transfers"] += 1
+        st["syms"].add(sym)
+        return out
+
+    def moved_bytes(self) -> int:
+        return sum(st["bytes"] for st in self.edge_stats.values())

@@ -134,6 +134,13 @@ class HeartbeatMonitor:
         else:
             w.last_beat, w.step, w.alive = now, step, True
 
+    def register_silent(self, worker: str, step: int = 0) -> None:
+        """Register a worker that did NOT answer the registration poll:
+        it fails the next deadline check instead of looking freshly
+        alive (a beat would stamp 'now' and mask the silence)."""
+        if worker not in self.workers:
+            self.workers[worker] = WorkerState(float("-inf"), step)
+
     def check(self) -> dict:
         """Returns {"failed": [...], "stragglers": [...]}."""
         now = self.clock()
@@ -213,6 +220,33 @@ class Platform:
     def post(self, kind: str, payload: Optional[dict] = None) -> None:
         self.events.post(kind, payload)
         self.events.process()
+
+    # ---------------------------------------------------------- tile groups
+    def run_partitioned(self, bound: rbl_mod.BoundProgram,
+                        inputs: Optional[dict] = None, mesh=None,
+                        n_groups: int = 2, rimfs=None) -> dict:
+        """Orchestrate partitioned multi-tile execution (paper's RTPM role
+        over the tile array): every tile group is registered as a
+        heartbeat-monitored worker ("tile<g>"), stages pipeline over the
+        mesh with split-phase cut-edge streams, and a failed stage
+        re-queues on a surviving group after the liveness sweep — the
+        "worker_failed" / "stage_requeued" / "stage_complete" events fan
+        out through the unified dispatcher.
+        """
+        from repro.core import partition as partition_mod
+        from repro.core.executor import Executor
+        from repro.core.rhal import TileMesh
+        if mesh is None:
+            mesh = TileMesh(n_groups)
+        rimfs = rimfs if rimfs is not None else self.rimfs
+        if isinstance(bound, partition_mod.PartitionedProgram):
+            return partition_mod.execute(bound, mesh, inputs=inputs,
+                                         rimfs=rimfs, platform=self)
+        # delegate to the executor's cached path: repeated orchestration
+        # of the same BoundProgram re-cuts and re-links nothing (the
+        # executor's own driver is unused — per-group drivers dispatch)
+        return Executor().run_partitioned(
+            bound, inputs=inputs, rimfs=rimfs, mesh=mesh, platform=self)
 
     # ------------------------------------------------------------ elasticity
     def handle_failures(self, bound: rbl_mod.BoundProgram,

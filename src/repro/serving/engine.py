@@ -19,6 +19,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import rctc
 from repro.core import rimfs as rimfs_mod
+from repro.core.rhal import TileMesh
 from repro.core.rtpm import Telemetry
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import transformer as tf
@@ -40,8 +41,12 @@ def params_from_rimfs(cfg: ModelConfig, fs: rimfs_mod.RIMFS, driver=None):
     weight ONCE into the driver's arena; later calls — e.g. constructing a
     second ``ServingEngine`` over the same image — reuse the pinned device
     buffers and perform zero re-uploads (the driver's DMA counters do not
-    move). Without a driver, leaves are zero-copy host views.
+    move). Without a driver, leaves are zero-copy host views. A
+    ``TileMesh`` is accepted in place of a driver: residency anchors on
+    the mesh's primary (first live) tile group.
     """
+    if isinstance(driver, TileMesh):
+        driver = driver.primary
     specs = tf.model_specs(cfg)
     leaves, treedef = jax.tree_util.tree_flatten_with_path(
         specs, is_leaf=is_spec)
@@ -67,13 +72,15 @@ class ServingEngine:
     """Fixed-slot continuous batching (decode batch = n_slots)."""
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 max_seq: int = 256, greedy: bool = True, scheduler=None):
+                 max_seq: int = 256, greedy: bool = True, scheduler=None,
+                 mesh: Optional[TileMesh] = None):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.greedy = greedy
         self.scheduler = scheduler      # optional DeadlineScheduler
+        self.mesh = mesh                # optional TileMesh (multi-tile)
         self.telemetry = Telemetry()
         self._prefill = jax.jit(make_prefill_step(cfg))
         self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
@@ -93,7 +100,13 @@ class ServingEngine:
 
         Weights resolve through ``RIMFS.resident(driver)``: repeated
         engine construction over the same image re-binds the pinned device
-        buffers instead of re-uploading (zero additional DMA)."""
+        buffers instead of re-uploading (zero additional DMA). ``driver``
+        may be a ``TileMesh``: weights pin into the primary tile group's
+        arena, and the mesh is exposed as ``engine.mesh`` so the
+        orchestration layer can drive partitioned RCB dispatch / failover
+        against the same groups the weights live on."""
+        if isinstance(driver, TileMesh):
+            kwargs.setdefault("mesh", driver)
         return cls(cfg, params_from_rimfs(cfg, fs, driver), **kwargs)
 
     # ----------------------------------------------------------------- api

@@ -143,6 +143,44 @@ def test_alloc_free_ops_roundtrip_through_arena():
 
 
 # ---------------------------------------------------------------------------
+# Split-phase DMA ticket protocol
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("direction", ["h2d", "d2h"])
+def test_dma_ticket_double_wait_raises_eager(direction):
+    """Regression (satellite fix): a DmaTicket could be redeemed twice
+    silently — on a raw-pointer backend the descriptor is recycled at
+    wait, so the second wait would observe another transfer's state."""
+    drv = rhal.make_eager_driver()
+    host = np.ones(32, np.float32)
+    buf = host if direction == "h2d" \
+        else drv.wait_dma(drv.initiate_dma(host, "h2d"))
+    t = drv.dma_async(buf, direction)
+    drv.dma_wait(t)
+    with pytest.raises(rhal.DmaError, match="redeemed"):
+        drv.dma_wait(t)
+
+
+def test_dma_ticket_double_wait_raises_trace():
+    drv = rhal.make_trace_driver()
+    t = drv.dma_async(np.ones(8, np.float32), "h2d")
+    drv.dma_wait(t)
+    with pytest.raises(rhal.DmaError, match="redeemed"):
+        drv.dma_wait(t)
+
+
+def test_dma_batch_tickets_each_redeem_once():
+    drv = rhal.make_eager_driver()
+    hosts = [np.full(16, i, np.float32) for i in range(3)]
+    tickets = drv.dma_async_batch(hosts, "h2d")
+    for t in tickets:
+        drv.dma_wait(t)
+    for t in tickets:
+        with pytest.raises(rhal.DmaError, match="redeemed"):
+            drv.dma_wait(t)
+
+
+# ---------------------------------------------------------------------------
 # Residency plan
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,308 @@
+"""Differential conformance matrix: the SAME RCB program must produce
+bit-identical outputs through every execution path the runtime offers —
+
+    run_interpreted (per-op decode + host sync, the OS-mediated baseline)
+    run             (linked thunks, compiled dispatch)
+    fuse            (one staged XLA program, the baremetal analogue)
+    run_partitioned (per-tile-group stages pipelined over a TileMesh)
+
+— and partitioned execution must be invariant to the tile-group count
+(1 / 2 / 4). This is the interpreter/compiled-path boundary contract
+OS-free runtimes live or die by (TFLM's conformance-testing lesson), over
+a corpus spanning conv / matmul / quant / DMA / ALLOC-FREE mixes and the
+ResNet-18 case study.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import rbl, rctc, rhal, rimfs
+from repro.core.executor import Executor
+from repro.core.rcb import Op, RCB, RCBOp, RCBProgram, TensorDesc
+
+TILE_COUNTS = (1, 2, 4)
+
+
+def _np(v):
+    return np.asarray(jax.block_until_ready(v))
+
+
+def _quant_mix_program():
+    """QUANTIZE/DEQUANT + ALLOC/FREE + explicit DMA in one stream."""
+    t = {
+        "x": TensorDesc("x", (8, 8), "float32", "input"),
+        "w": TensorDesc("w", (8, 8), "float32", "weight"),
+        "xd": TensorDesc("xd", (8, 8), "float32", "scratch"),
+        "g": TensorDesc("g", (8, 8), "float32", "scratch"),
+        "q": TensorDesc("q", (8, 8), "int8", "scratch"),
+        "dq": TensorDesc("dq", (8, 8), "float32", "scratch"),
+        "s": TensorDesc("s", (8, 8), "float32", "scratch"),
+        "a": TensorDesc("a", (8, 8), "float32", "scratch"),
+        "output": TensorDesc("output", (8, 8), "float32", "output"),
+    }
+    blocks = [
+        RCB(0, "layer", (), (
+            RCBOp(Op.DMA_H2D, ("xd",), ("x",)),
+            RCBOp(Op.GEMM, ("g",), ("xd", "w")),
+        )),
+        RCB(1, "layer", (0,), (
+            RCBOp(Op.QUANTIZE, ("q",), ("g",), {"scale": 0.05}),
+            RCBOp(Op.DEQUANT, ("dq",), ("q",), {"scale": 0.05}),
+        )),
+        RCB(2, "layer", (1,), (
+            RCBOp(Op.ALLOC, ("s",), (), {"shape": [8, 8],
+                                         "dtype": "float32"}),
+            RCBOp(Op.ADD, ("a",), ("dq", "s")),
+            RCBOp(Op.FREE, ("s",)),
+            RCBOp(Op.RELU, ("output",), ("a",)),
+            RCBOp(Op.FENCE),
+        )),
+    ]
+    prog = RCBProgram("quant_mix", t, blocks)
+    prog.validate()
+    return prog
+
+
+def _corpus(rng):
+    """(name, program, weight files, inputs) for the conformance matrix."""
+    n = 16
+    cases = []
+    cases.append((
+        "matmul_dma",
+        rctc.compile_matmul(n, with_dma=True),
+        {"b": rng.randn(n, n).astype(np.float32)},
+        {"a": rng.randn(n, n).astype(np.float32)},
+    ))
+    cases.append((
+        "conv_relu_softmax",
+        rctc.compile_conv_relu_softmax(),
+        {"w_conv": rng.randn(3, 3, 3, 9).astype(np.float32)},
+        {"input": rng.randn(1, 8, 8, 3).astype(np.float32)},
+    ))
+    K = 4
+    cases.append((
+        "dma_pipeline",
+        rctc.compile_dma_pipeline(K, n),
+        {"b": rng.randn(n, n).astype(np.float32)},
+        {f"in{i}": rng.randn(n, n).astype(np.float32) for i in range(K)},
+    ))
+    cases.append((
+        "transfer_stream",
+        rctc.compile_transfer_pipeline(K, 256),
+        {},
+        {f"in{i}": rng.randn(256).astype(np.float32) for i in range(K)},
+    ))
+    cases.append((
+        "gemm_chain",
+        rctc.compile_gemm_chain(5, n),
+        rctc.gemm_chain_weights(5, n),
+        {"input": rng.randn(n, n).astype(np.float32)},
+    ))
+    cases.append((
+        "quant_mix",
+        _quant_mix_program(),
+        {"w": rng.randn(8, 8).astype(np.float32)},
+        {"x": rng.randn(8, 8).astype(np.float32)},
+    ))
+    return cases
+
+
+def _reference(prog, files, inputs):
+    """Single-device interpreted outputs (the conformance reference)."""
+    fs = rimfs.mount(rimfs.pack(files)) if files else None
+    ex = Executor()
+    ref = ex.run_interpreted(rbl.bind(prog, rimfs=fs, inputs=dict(inputs)))
+    return fs, ex, {k: _np(v) for k, v in ref.items()}
+
+
+def _assert_same(ref: dict, got: dict, label: str):
+    assert set(got) == set(ref), \
+        f"{label}: outputs {sorted(got)} != {sorted(ref)}"
+    for k in ref:
+        np.testing.assert_array_equal(
+            ref[k], _np(got[k]), err_msg=f"{label}: output {k!r} diverged")
+
+
+_CASES = None
+
+
+def _cases():
+    global _CASES
+    if _CASES is None:
+        _CASES = _corpus(np.random.RandomState(0))
+    return _CASES
+
+
+@pytest.mark.parametrize("name", [c[0] for c in _corpus(
+    np.random.RandomState(0))])
+def test_conformance_linked_and_fused(name):
+    name, prog, files, inputs = next(c for c in _cases() if c[0] == name)
+    fs, ex, ref = _reference(prog, files, inputs)
+    _assert_same(ref, ex.run(rbl.bind(prog, rimfs=fs, inputs=dict(inputs))),
+                 f"{name}/linked")
+    bound_f = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound_f)
+    _assert_same(ref, fused(dict(inputs), ex.weights_from(bound_f)),
+                 f"{name}/fused")
+
+
+@pytest.mark.parametrize("n_groups", TILE_COUNTS)
+@pytest.mark.parametrize("name", [c[0] for c in _corpus(
+    np.random.RandomState(0))])
+def test_conformance_partitioned(name, n_groups):
+    name, prog, files, inputs = next(c for c in _cases() if c[0] == name)
+    fs, ex, ref = _reference(prog, files, inputs)
+    mesh = rhal.TileMesh(n_groups)
+    bound = rbl.bind(prog, rimfs=fs, inputs=dict(inputs))
+    got = ex.run_partitioned(bound, rimfs=fs, mesh=mesh)
+    _assert_same(ref, got, f"{name}/partitioned@{n_groups}")
+    part = bound._partitions[mesh.n_groups]
+    # the mesh's movement accounting covers exactly the cut-edge table
+    assert mesh.moved_bytes() == part.cut_bytes()
+
+
+@pytest.mark.parametrize("n_groups", TILE_COUNTS)
+def test_conformance_resnet18(n_groups):
+    """The paper's case study through all four paths at every tile count."""
+    from repro.models import resnet as rn
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params), batch=1)
+    fs = rimfs.mount(image)
+    rng = np.random.RandomState(1)
+    x = rng.rand(1, cfg.image_size, cfg.image_size, 3).astype(np.float32)
+    ex = Executor()
+    ref = {k: _np(v) for k, v in ex.run_interpreted(
+        rbl.bind(prog, rimfs=fs, inputs={"input": x})).items()}
+    _assert_same(ref, ex.run(rbl.bind(prog, rimfs=fs,
+                                      inputs={"input": x})),
+                 "resnet/linked")
+    bound_f = rbl.bind(prog, rimfs=fs)
+    fused = ex.fuse(bound_f)
+    _assert_same(ref, fused({"input": x}, ex.weights_from(bound_f)),
+                 "resnet/fused")
+    bound_p = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    mesh = rhal.TileMesh(n_groups)
+    _assert_same(ref, ex.run_partitioned(bound_p, rimfs=fs, mesh=mesh),
+                 f"resnet/partitioned@{n_groups}")
+    if n_groups > 1:
+        part = bound_p._partitions[mesh.n_groups]
+        assert part.edges, "ResNet partition must have cut edges"
+        assert mesh.moved_bytes() == part.cut_bytes()
+        # every tile group that ran compute got its own residency plan
+        plans = [t.residency(mesh.group(t.gid).driver)
+                 for t in part.tiles]
+        assert all(p is not None for p in plans)
+        assert all(p.high_water >= 0 for p in plans)
+
+
+def test_partitioned_reuses_bound_weights_without_rimfs():
+    """Regression: a BoundProgram whose weights already resolved at bind
+    time must run partitioned WITHOUT re-supplying the image — the tile
+    re-binds reuse the original bind's weight buffers."""
+    rng = np.random.RandomState(3)
+    prog = rctc.compile_gemm_chain(4, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(4, 8)))
+    x = rng.randn(8, 8).astype(np.float32)
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    ref = {k: _np(v) for k, v in ex.run(bound).items()}
+    got = ex.run_partitioned(bound, mesh=rhal.TileMesh(2))   # no rimfs=
+    _assert_same(ref, got, "bound-weights/partitioned@2")
+
+
+def test_tile_bind_cache_stays_bounded():
+    """Regression: orchestrating the same BoundProgram over many FRESH
+    meshes (post-failure replacement) must not retain every discarded
+    mesh's bindings — the per-tile bind cache evicts."""
+    from repro.core.partition import _BIND_CACHE_CAP
+    prog = rctc.compile_gemm_chain(3, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(3, 8)))
+    x = np.random.RandomState(0).randn(8, 8).astype(np.float32)
+    bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    ex = Executor()
+    ref = {k: _np(v) for k, v in ex.run(bound).items()}
+    for _ in range(_BIND_CACHE_CAP + 4):
+        got = ex.run_partitioned(bound, rimfs=fs, mesh=rhal.TileMesh(2))
+        _assert_same(ref, got, "fresh-mesh loop")
+    part = bound._partitions[2]
+    assert all(len(t._bound) <= _BIND_CACHE_CAP for t in part.tiles)
+
+
+def test_partition_is_deterministic():
+    """Re-partitioning yields the identical cut-edge table (the partition
+    is static data, like every other plan in the runtime)."""
+    from repro.core import partition as partition_mod
+    prog = rctc.compile_gemm_chain(6, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(6, 8)))
+    bound = rbl.bind(prog, rimfs=fs)
+    p1 = partition_mod.partition(bound, 3)
+    p2 = partition_mod.partition(bound, 3)
+    assert p1.edges == p2.edges
+    assert [t.program.name for t in p1.tiles] == \
+        [t.program.name for t in p2.tiles]
+    for a, b in zip(p1.tiles, p2.tiles):
+        assert a.cut_ins == b.cut_ins and a.cut_outs == b.cut_outs
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-generated programs (optional dependency, like the other suites)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:                       # optional test dependency
+    _HAS_HYPOTHESIS = False
+
+if _HAS_HYPOTHESIS:
+    def _random_program(draw_ops):
+        """Random straight-line program over (4, 6) f32 buffers (the
+        test_executor_property generator, reused for the partition
+        matrix): every intermediate symbol is a potential cut edge."""
+        tensors = {
+            "in0": TensorDesc("in0", (4, 6), "float32", "input"),
+            "w0": TensorDesc("w0", (6, 6), "float32", "weight"),
+        }
+        syms = ["in0"]
+        ops = []
+        for i, choice in enumerate(draw_ops):
+            src = syms[choice % len(syms)]
+            dst = f"t{i}"
+            kind = choice % 4
+            tensors[dst] = TensorDesc(dst, (4, 6), "float32", "scratch")
+            if kind == 0:
+                ops.append(RCBOp(Op.RELU, (dst,), (src,)))
+            elif kind == 1:
+                ops.append(RCBOp(Op.SOFTMAX, (dst,), (src,), {"axis": -1}))
+            elif kind == 2:
+                other = syms[(choice // 4) % len(syms)]
+                ops.append(RCBOp(Op.ADD, (dst,), (src, other)))
+            else:
+                ops.append(RCBOp(Op.GEMM, (dst,), (src, "w0")))
+            syms.append(dst)
+        out = syms[-1]
+        tensors[out] = TensorDesc(out, (4, 6), "float32", "output")
+        prog = RCBProgram("rand", tensors,
+                          [RCB(0, "layer", (), tuple(ops))])
+        prog.validate()
+        return prog
+
+    @given(st.lists(st.integers(0, 1000), min_size=2, max_size=16),
+           st.sampled_from(TILE_COUNTS))
+    @settings(max_examples=25, deadline=None)
+    def test_property_partitioned_matches_linked(draw_ops, n_groups):
+        prog = _random_program(draw_ops)
+        rng = np.random.RandomState(0)
+        fs = rimfs.mount(rimfs.pack(
+            {"w0": rng.randn(6, 6).astype(np.float32)}))
+        x = rng.randn(4, 6).astype(np.float32)
+        ex = Executor()
+        ref = {k: _np(v) for k, v in ex.run(
+            rbl.bind(prog, rimfs=fs, inputs={"in0": x})).items()}
+        bound = rbl.bind(prog, rimfs=fs, inputs={"in0": x})
+        got = ex.run_partitioned(bound, rimfs=fs,
+                                 mesh=rhal.TileMesh(n_groups))
+        _assert_same(ref, got, f"rand/partitioned@{n_groups}")

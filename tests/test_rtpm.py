@@ -1,7 +1,11 @@
-"""RTPM: event dispatch, heartbeats/stragglers, telemetry CV, provisioning."""
+"""RTPM: event dispatch, heartbeats/stragglers, telemetry CV, provisioning,
+and tile-group fault injection (kill a worker mid-program -> heartbeat
+detection -> stage re-queue on a survivor -> reference-identical output)."""
 import numpy as np
 
-from repro.core import rctc, rimfs
+import jax
+
+from repro.core import rbl, rctc, rhal, rimfs
 from repro.core.executor import Executor
 from repro.core.rtpm import EventDispatcher, HeartbeatMonitor, Platform, \
     Telemetry
@@ -80,3 +84,82 @@ def test_platform_rejects_corrupt_image(rng):
     img[-2] ^= 0xFF
     with pytest.raises(RIMFSError):
         Platform().provision(image=bytes(img))
+
+
+# ---------------------------------------------------------------------------
+# Tile-group fault injection (partitioned execution under RTPM)
+# ---------------------------------------------------------------------------
+
+def _chain_setup(depth=4, n=16, seed=0):
+    prog = rctc.compile_gemm_chain(depth, n)
+    files = rctc.gemm_chain_weights(depth, n)
+    fs = rimfs.mount(rimfs.pack(files))
+    x = np.random.RandomState(seed).randn(n, n).astype(np.float32)
+    ref = Executor().run(rbl.bind(prog, rimfs=fs, inputs={"input": x}))
+    ref = {k: np.asarray(jax.block_until_ready(v)) for k, v in ref.items()}
+    return prog, fs, x, ref
+
+
+def test_tile_failure_detected_and_stage_requeued(rng):
+    """Kill a tile group mid-program: HeartbeatMonitor flags it dead,
+    Platform re-queues the orphaned stage on a surviving group, and the
+    final output is bit-identical to the single-device reference."""
+    prog, fs, x, ref = _chain_setup()
+    t = {"now": 0.0}
+    plat = Platform(deadline=5.0, clock=lambda: t["now"])
+    mesh = rhal.TileMesh(2)
+    seen = {"failed": [], "requeued": []}
+    plat.events.register("worker_failed",
+                         lambda p: seen["failed"].append(p))
+    plat.events.register("stage_requeued",
+                         lambda p: seen["requeued"].append(p))
+
+    def killer(p):
+        if p["stage"] == 0:            # group 1's stage has NOT run yet
+            mesh.kill(1)
+            t["now"] += 10.0           # past the 5 s heartbeat deadline
+    plat.events.register("stage_complete", killer)
+
+    bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    out = plat.run_partitioned(bound, mesh=mesh, rimfs=fs)
+
+    # detection: the monitor (not the exception path) judged tile1 dead —
+    # live groups answered the liveness sweep, the killed one could not
+    assert plat.heartbeats.workers["tile1"].alive is False
+    assert any("tile1" in p["workers"] for p in seen["failed"])
+    # re-queue: stage 1 moved to the surviving group 0
+    assert seen["requeued"] and seen["requeued"][0]["from"] == 1
+    assert seen["requeued"][0]["to"] == 0
+    # output survives the failover bit-identically
+    assert set(out) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(
+            ref[k], np.asarray(jax.block_until_ready(out[k])))
+
+
+def test_tile_failure_on_first_stage_fails_over(rng):
+    """A group dead BEFORE its first dispatch: the stage never starts
+    there — it re-queues and the program still completes correctly."""
+    prog, fs, x, ref = _chain_setup()
+    t = {"now": 0.0}
+    plat = Platform(deadline=5.0, clock=lambda: t["now"])
+    mesh = rhal.TileMesh(3)
+    mesh.kill(0)
+    t["now"] = 10.0                    # group 0 silent past the deadline
+    bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    out = plat.run_partitioned(bound, mesh=mesh, rimfs=fs)
+    assert plat.heartbeats.workers["tile0"].alive is False
+    for k in ref:
+        np.testing.assert_array_equal(
+            ref[k], np.asarray(jax.block_until_ready(out[k])))
+
+
+def test_all_tiles_dead_raises(rng):
+    import pytest
+    prog, fs, x, _ = _chain_setup(depth=2)
+    mesh = rhal.TileMesh(2)
+    mesh.kill(0)
+    mesh.kill(1)
+    bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+    with pytest.raises(rhal.TileFailure):
+        Executor().run_partitioned(bound, rimfs=fs, mesh=mesh)

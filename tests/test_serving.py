@@ -128,6 +128,37 @@ def test_engine_from_rimfs_zero_reupload(rng):
     assert r1.out_tokens == r2.out_tokens
 
 
+def test_engine_accepts_tile_mesh(rng):
+    """ServingEngine provisions from a TileMesh in place of one driver:
+    weights pin into the primary tile group's arena (same zero-reupload
+    residency), the mesh rides on the engine, and decode matches a
+    single-driver engine token for token."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    fs = rimfs.mount(pack_params_image(params))
+    mesh = rhal.TileMesh(2)
+    eng_m = ServingEngine.from_rimfs(cfg, fs, driver=mesh, max_batch=2,
+                                     max_seq=64)
+    assert eng_m.mesh is mesh
+    primary = mesh.primary
+    uploaded = primary.stats.get("dma_bytes", 0)
+    assert uploaded > 0                       # pinned into group 0's arena
+    snapshot = dict(primary.stats)
+    ServingEngine.from_rimfs(cfg, fs, driver=mesh, max_batch=2, max_seq=64)
+    assert primary.stats.get("dma_bytes", 0) == snapshot.get("dma_bytes", 0)
+    drv = rhal.make_eager_driver()
+    eng_d = ServingEngine.from_rimfs(cfg, fs, driver=drv, max_batch=2,
+                                     max_seq=64)
+    prompt = rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+    r1 = Request(rid=0, prompt=prompt, max_new=3)
+    r2 = Request(rid=1, prompt=prompt, max_new=3)
+    eng_m.submit(r1)
+    eng_d.submit(r2)
+    eng_m.run_until_drained()
+    eng_d.run_until_drained()
+    assert r1.out_tokens == r2.out_tokens
+
+
 def test_params_rimfs_roundtrip_matches(rng):
     cfg = get_config("qwen2-1.5b-smoke")
     params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
