@@ -485,6 +485,82 @@ def partition_scaling_bench(rng=None, iters: int = 10) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Serving concurrency (protocol v2 pipelining + single-dispatcher batching)
+# ---------------------------------------------------------------------------
+
+def serving_concurrency_bench(per_client: int = 6, pipeline: int = 3) -> None:
+    """Aggregate serving throughput at 1/4/8 concurrent pipelined
+    connections against ONE dispatcher-owned device, with a bit-identical
+    gate: every concurrent response must equal the serial reference for
+    the same input. One host device serves all clients, so aggregate
+    throughput is expected to hold roughly flat while per-client latency
+    grows — the row's job is to show the dispatcher neither garbles nor
+    drops under contention, and what the fan-in costs."""
+    import threading
+
+    from repro.serving.server import Client, InferenceServer
+
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params), batch=1)
+    server = InferenceServer(max_queue=512)
+    addr = server.start()
+    try:
+        c0 = Client(addr)
+        c0.provision(image, prog.encode())
+        rng = np.random.RandomState(0)
+        max_clients = 8
+        xs = {(c, i): rng.rand(1, cfg.image_size, cfg.image_size, 3)
+              .astype(np.float32)
+              for c in range(max_clients) for i in range(per_client)}
+        refs = {k: c0.infer(input=v)["output"] for k, v in xs.items()}
+
+        t_base = None
+        for n_clients in (1, 4, 8):
+            results: dict = {}
+
+            def run_client(cid: int) -> None:
+                cl = Client(addr)
+                try:
+                    for base in range(0, per_client, pipeline):
+                        rids = [(i, cl.infer_async(input=xs[(cid, i)]))
+                                for i in range(base,
+                                               min(base + pipeline,
+                                                   per_client))]
+                        for i, rid in rids:
+                            results[(cid, i)] = cl.result(rid)["output"]
+                finally:
+                    cl.close()
+
+            threads = [threading.Thread(target=run_client, args=(c,))
+                       for c in range(n_clients)]
+            t0 = time.perf_counter()
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            dt = time.perf_counter() - t0
+            n = n_clients * per_client
+            identical = len(results) == n and all(
+                np.array_equal(results[k], refs[k]) for k in results)
+            thpt = n / dt
+            if t_base is None:
+                t_base = thpt
+            emit(f"serving_concurrency/clients_{n_clients}", dt / n * 1e6,
+                 f"agg_thpt={thpt:.1f}req/s vs_1client={thpt/t_base:.2f}x "
+                 f"(pipeline depth {pipeline}); bit_identical={identical}")
+        tel = c0.telemetry()["serving"]
+        emit("serving_concurrency/dispatcher", 0.0,
+             f"processed={tel['processed']} rejected={tel['rejected']} "
+             f"shed={tel['shed']} "
+             f"queue_wait_p95={tel['queue_wait'].get('p95', 0)*1e3:.2f}ms")
+        c0.close()
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
 # Pallas kernels (interpret mode — correctness-path timing only)
 # ---------------------------------------------------------------------------
 
@@ -603,6 +679,7 @@ def main() -> None:
     residency_reuse_bench()
     table2_resource_utilization()
     table3_resnet_inference(iters=50 if quick else 200)
+    serving_concurrency_bench(per_client=3 if quick else 6)
     kernel_microbench()
     with open(args.json, "w") as f:
         json.dump(RESULTS, f, indent=2, sort_keys=True)

@@ -13,15 +13,26 @@ same role is the *cluster control plane*; this module provides:
   * ``HeartbeatMonitor``— worker liveness with an injectable clock; a
     deadline policy yields failure + straggler verdicts (the 1000-node
     fault-tolerance hook; tests drive it with a fake clock).
+  * ``ServiceLoop``     — the single-owner dispatcher worker: N producer
+    threads enqueue work into a bounded queue, ONE heartbeat-monitored
+    thread drains it, so every piece of state the handler touches is
+    owned by exactly one thread (the serving path's concurrency model).
   * ``Platform``        — glue: provisioning (mount RIMFS image + decode
     RCB program from bytes — the network payloads), time-to-service
     measurement, checkpoint/restart + elastic re-binding orchestration.
+
+Thread-safety: the network server calls into RTPM from connection-handler
+threads while the dispatcher runs, so ``EventDispatcher``, ``Telemetry``
+and ``HeartbeatMonitor`` take internal locks (handlers run outside the
+dispatcher lock so they may re-post without deadlocking).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import queue as queue_mod
 import statistics
+import threading
 import time
 from typing import Any, Callable, Optional
 
@@ -38,24 +49,31 @@ class EventDispatcher:
     def __init__(self):
         self._handlers: dict[str, list[Callable]] = collections.defaultdict(list)
         self._queue: collections.deque = collections.deque()
+        self._lock = threading.Lock()
         self.dropped = 0
 
     def register(self, kind: str, handler: Callable[[dict], None]) -> None:
-        self._handlers[kind].append(handler)
+        with self._lock:
+            self._handlers[kind].append(handler)
 
     def post(self, kind: str, payload: Optional[dict] = None) -> None:
         self._queue.append((kind, payload or {}))
 
     def process(self, max_events: Optional[int] = None) -> int:
+        """Drain the queue; safe to call from several threads at once.
+        Events pop under the lock but handlers run OUTSIDE it, so a
+        handler may ``post`` (or even ``process``) without deadlocking."""
         n = 0
-        while self._queue and (max_events is None or n < max_events):
-            kind, payload = self._queue.popleft()
-            handlers = self._handlers.get(kind)
-            if not handlers:
-                self.dropped += 1
-            else:
-                for h in handlers:
-                    h(payload)
+        while max_events is None or n < max_events:
+            with self._lock:
+                if not self._queue:
+                    return n
+                kind, payload = self._queue.popleft()
+                handlers = list(self._handlers.get(kind) or ())
+                if not handlers:
+                    self.dropped += 1
+            for h in handlers:
+                h(payload)
             n += 1
         return n
 
@@ -68,6 +86,7 @@ class Telemetry:
     def __init__(self, capacity: int = 65536):
         self._lat: collections.deque = collections.deque(maxlen=capacity)
         self._metrics: collections.deque = collections.deque(maxlen=capacity)
+        self._lock = threading.Lock()
         self.bytes_moved = 0
         self.bytes_overlapped = 0
 
@@ -78,8 +97,9 @@ class Telemetry:
         """Data-movement accounting from the residency plan: total DMA
         payload vs the split-phase share that overlapped compute (the
         paper's 3-7x data-movement story, DESIGN.md §6)."""
-        self.bytes_moved += int(bytes_moved)
-        self.bytes_overlapped += int(bytes_overlapped)
+        with self._lock:
+            self.bytes_moved += int(bytes_moved)
+            self.bytes_overlapped += int(bytes_overlapped)
 
     def dma_summary(self) -> dict:
         moved, over = self.bytes_moved, self.bytes_overlapped
@@ -125,40 +145,204 @@ class HeartbeatMonitor:
         self.straggler_factor = straggler_factor
         self.clock = clock
         self.workers: dict[str, WorkerState] = {}
+        self._lock = threading.Lock()
 
     def beat(self, worker: str, step: int = 0) -> None:
         now = self.clock()
-        w = self.workers.get(worker)
-        if w is None:
-            self.workers[worker] = WorkerState(now, step)
-        else:
-            w.last_beat, w.step, w.alive = now, step, True
+        with self._lock:
+            w = self.workers.get(worker)
+            if w is None:
+                self.workers[worker] = WorkerState(now, step)
+            else:
+                w.last_beat, w.step, w.alive = now, step, True
 
     def register_silent(self, worker: str, step: int = 0) -> None:
         """Register a worker that did NOT answer the registration poll:
         it fails the next deadline check instead of looking freshly
         alive (a beat would stamp 'now' and mask the silence)."""
-        if worker not in self.workers:
-            self.workers[worker] = WorkerState(float("-inf"), step)
+        with self._lock:
+            if worker not in self.workers:
+                self.workers[worker] = WorkerState(float("-inf"), step)
 
     def check(self) -> dict:
         """Returns {"failed": [...], "stragglers": [...]}."""
         now = self.clock()
         failed, stragglers = [], []
-        steps = [w.step for w in self.workers.values() if w.alive]
-        median_step = sorted(steps)[len(steps) // 2] if steps else 0
-        for name, w in self.workers.items():
-            if not w.alive:
-                continue
-            age = now - w.last_beat
-            if age > self.deadline:
-                w.alive = False
-                failed.append(name)
-            elif age > self.deadline / self.straggler_factor or \
-                    w.step + 2 < median_step:
-                stragglers.append(name)
+        with self._lock:
+            steps = [w.step for w in self.workers.values() if w.alive]
+            median_step = sorted(steps)[len(steps) // 2] if steps else 0
+            for name, w in self.workers.items():
+                if not w.alive:
+                    continue
+                age = now - w.last_beat
+                if age > self.deadline:
+                    w.alive = False
+                    failed.append(name)
+                elif age > self.deadline / self.straggler_factor or \
+                        w.step + 2 < median_step:
+                    stragglers.append(name)
         return {"failed": failed, "stragglers": stragglers,
                 "median_step": median_step}
+
+
+# ---------------------------------------------------------------------------
+# ServiceLoop — the single-owner dispatcher worker
+# ---------------------------------------------------------------------------
+
+_DRAIN = object()          # sentinel: drain what's queued, then exit
+
+
+class ServiceLoop:
+    """Bounded work queue drained by ONE heartbeat-monitored thread.
+
+    The serving path's concurrency model in one object: any number of
+    producer threads call ``submit`` (non-blocking — a full queue or a
+    draining loop returns ``False``, the caller's backpressure signal),
+    and a single worker thread owns everything the ``handler`` touches.
+    No shared device state, no lock sprinkling — races are eliminated at
+    the root by ownership.
+
+    The worker registers with the platform's ``HeartbeatMonitor`` under
+    ``name`` and beats every iteration (including idle polls), so a hung
+    handler is caught by the same deadline policy that watches tile
+    workers. ``on_idle`` (optional) runs whenever the queue is empty —
+    and, when it reports progress by returning True, between queue pops —
+    which is how the serving engine's continuous-batching decode steps
+    interleave with request intake. Queue-wait and handler latency land
+    in two ``Telemetry`` rings for the TELEMETRY wire message.
+    """
+
+    def __init__(self, platform: "Platform", handler: Callable[[Any], None],
+                 name: str = "dispatcher", max_queue: int = 256,
+                 poll: float = 0.02,
+                 on_idle: Optional[Callable[[], bool]] = None,
+                 on_drop: Optional[Callable[[Any], None]] = None):
+        self.platform = platform
+        self.handler = handler
+        self.name = name
+        self.poll = poll
+        self.on_idle = on_idle
+        self.on_drop = on_drop
+        self.queue_wait = Telemetry()
+        self.dispatch_latency = Telemetry()
+        self.stats = {"processed": 0, "rejected": 0, "errors": 0}
+        self._stats_lock = threading.Lock()   # "rejected" is multi-producer
+        self._submit_lock = threading.Lock()  # orders submits vs close()
+        self._q: queue_mod.Queue = queue_mod.Queue(maxsize=max_queue)
+        self._draining = threading.Event()
+        self._drain_on_exit = True
+        self._step = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"rtpm-{name}")
+        platform.heartbeats.beat(name, 0)
+        self._thread.start()
+
+    # ------------------------------------------------------------- producers
+    def submit(self, item: Any) -> bool:
+        """Enqueue from any thread. False == rejected (backpressure).
+
+        The drain-check + put happen under ``_submit_lock`` — ``close``
+        sets the draining flag under the same lock, so an accepted item
+        is ALWAYS ahead of the drain sentinel in the queue (a submit that
+        returned True cannot be silently dropped by a racing shutdown)."""
+        with self._submit_lock:
+            if not self._draining.is_set():
+                try:
+                    self._q.put_nowait((time.monotonic(), item))
+                    return True
+                except queue_mod.Full:
+                    pass
+        with self._stats_lock:
+            self.stats["rejected"] += 1
+        return False
+
+    def reject(self) -> None:
+        """Count an item the caller refused BEFORE enqueue (e.g. an
+        admission-cap refusal) so the rejected stat covers all paths."""
+        with self._stats_lock:
+            self.stats["rejected"] += 1
+
+    def depth(self) -> int:
+        return self._q.qsize()
+
+    # --------------------------------------------------------------- worker
+    def _idle(self) -> bool:
+        """on_idle, guarded: an exception must degrade to 'no progress',
+        never kill the dispatcher thread (the whole server would go dark
+        while still accepting connections)."""
+        if self.on_idle is None:
+            return False
+        try:
+            return bool(self.on_idle())
+        except Exception as e:
+            self.stats["errors"] += 1
+            self.platform.post("dispatch_error",
+                               {"worker": self.name, "error": repr(e)})
+            return False
+
+    def _run(self) -> None:
+        hb = self.platform.heartbeats
+        while True:
+            busy = self._idle()
+            try:
+                got = self._q.get_nowait() if busy \
+                    else self._q.get(timeout=self.poll)
+            except queue_mod.Empty:
+                hb.beat(self.name, self._step)
+                continue
+            if got is _DRAIN:
+                # graceful drain: finish whatever on_idle is still working
+                # through (e.g. in-flight continuous-batching decodes).
+                # A forced close (drain=False) skips this — the caller
+                # refuses the leftovers explicitly instead.
+                while self._drain_on_exit and self._idle():
+                    hb.beat(self.name, self._step)
+                hb.beat(self.name, self._step)
+                return
+            t_enq, item = got
+            self._step += 1
+            hb.beat(self.name, self._step)
+            self.queue_wait.record_latency(time.monotonic() - t_enq)
+            t0 = time.perf_counter()
+            try:
+                self.handler(item)
+            except Exception as e:      # handler owns replies; never die
+                self.stats["errors"] += 1
+                self.platform.post("dispatch_error",
+                                   {"worker": self.name, "error": repr(e)})
+            self.stats["processed"] += 1
+            self.dispatch_latency.record_latency(time.perf_counter() - t0)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self, drain: bool = True, timeout: float = 30.0) -> None:
+        """Stop the worker. ``drain=True`` processes everything already
+        queued first (graceful SHUTDOWN); ``drain=False`` hands each
+        dropped item to ``on_drop`` so its submitter can be refused
+        explicitly rather than left waiting forever."""
+        with self._submit_lock:     # no submit can land after the sentinel
+            self._draining.set()
+        self._drain_on_exit = drain
+        if not drain:
+            try:
+                while True:
+                    got = self._q.get_nowait()
+                    if got is not _DRAIN and self.on_drop is not None:
+                        self.on_drop(got[1])
+            except queue_mod.Empty:
+                pass
+        try:
+            self._q.put(_DRAIN, timeout=timeout)
+        except queue_mod.Full:      # worker stuck with a full queue: the
+            pass                    # heartbeat deadline is the real alarm
+        self._thread.join(timeout)
+
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+    def summary(self) -> dict:
+        return {**self.stats, "depth": self.depth(),
+                "queue_wait": self.queue_wait.summary(),
+                "dispatch": self.dispatch_latency.summary()}
 
 
 # ---------------------------------------------------------------------------

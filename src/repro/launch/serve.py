@@ -1,15 +1,18 @@
 """Serving driver: network-attached inference service (the paper's mode).
 
 Starts the CRC-framed socket server, provisions the ResNet-18 case study
-(or an LM engine with --lm), fires batched client requests at it, and
-reports the latency CV telemetry.
+(or an LM engine with --lm), fires batched client requests at it —
+optionally from several concurrent connections, each pipelining v2
+request-id frames — and reports latency CV + dispatcher telemetry.
 
   PYTHONPATH=src python -m repro.launch.serve --requests 64
+  PYTHONPATH=src python -m repro.launch.serve --requests 64 --clients 4
   PYTHONPATH=src python -m repro.launch.serve --lm --requests 8
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import numpy as np
@@ -23,10 +26,12 @@ from repro.models import resnet as rn
 from repro.models import transformer as tf
 from repro.models.common import init_params
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import DeadlineScheduler
 from repro.serving.server import Client, InferenceServer
 
 
-def serve_resnet(requests: int, batch: int) -> None:
+def serve_resnet(requests: int, batch: int, clients: int,
+                 pipeline: int) -> None:
     cfg = RESNET.smoke()
     params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
     prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params),
@@ -35,21 +40,55 @@ def serve_resnet(requests: int, batch: int) -> None:
     addr = server.start()
     print(f"[serve] listening on {addr}")
     try:
-        client = Client(addr)
-        print("[serve] provision:", client.provision(image, prog.encode()))
-        rng = np.random.RandomState(0)
+        c0 = Client(addr)
+        print("[serve] provision:", c0.provision(image, prog.encode()))
+        # distribute --requests exactly: first `requests % clients`
+        # connections take one extra
+        shares = [requests // clients + (1 if c < requests % clients else 0)
+                  for c in range(clients)]
+
+        def run_client(cid: int, counts: list) -> None:
+            client = c0 if cid == 0 else Client(addr)
+            rng = np.random.RandomState(cid)
+            per_client = shares[cid]
+            done = 0
+            try:
+                for _ in range(0, per_client, pipeline):
+                    rids = []
+                    for _ in range(min(pipeline, per_client - done)):
+                        x = rng.rand(batch, cfg.image_size, cfg.image_size,
+                                     3).astype(np.float32)
+                        rids.append(client.infer_async(input=x))
+                    for rid in rids:
+                        client.result(rid)
+                        done += 1
+            finally:
+                counts[cid] = done
+                if cid != 0:
+                    client.close()
+
+        counts = [0] * clients
         t0 = time.perf_counter()
-        for _ in range(requests):
-            x = rng.rand(batch, cfg.image_size, cfg.image_size, 3) \
-                .astype(np.float32)
-            out = client.infer(input=x)
+        threads = [threading.Thread(target=run_client, args=(cid, counts))
+                   for cid in range(clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
         dt = time.perf_counter() - t0
-        tel = client.telemetry()
-        print(f"[serve] {requests} requests x batch {batch}: "
-              f"{requests*batch/dt:.1f} img/s; "
+        n = sum(counts)
+        tel = c0.telemetry()
+        srv = tel.get("serving", {})
+        print(f"[serve] {n} requests x batch {batch} over {clients} "
+              f"client(s) (pipeline depth {pipeline}): "
+              f"{n*batch/dt:.1f} img/s; "
               f"CV={tel.get('cv_percent', 0):.2f}% "
-              f"p99={tel.get('p99', 0)*1e3:.2f}ms")
-        client.close()
+              f"p99={tel.get('p99', 0)*1e3:.2f}ms; "
+              f"dispatcher processed={srv.get('processed')} "
+              f"rejected={srv.get('rejected')} shed={srv.get('shed')} "
+              f"queue_wait_p95="
+              f"{srv.get('queue_wait', {}).get('p95', 0)*1e3:.2f}ms")
+        c0.close()
     finally:
         server.stop()
 
@@ -57,7 +96,9 @@ def serve_resnet(requests: int, batch: int) -> None:
 def serve_lm(requests: int) -> None:
     cfg = get_config("qwen2-1.5b-smoke")
     params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
-    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128)
+    sched = DeadlineScheduler()
+    eng = ServingEngine(cfg, params, max_batch=4, max_seq=128,
+                        scheduler=sched)
     rng = np.random.RandomState(0)
     reqs = [Request(rid=i,
                     prompt=rng.randint(0, cfg.vocab_size, (16,))
@@ -72,19 +113,23 @@ def serve_lm(requests: int) -> None:
     s = eng.telemetry.summary(warmup=2)
     print(f"[serve-lm] {requests} prompts, {toks} tokens in {dt:.2f}s "
           f"({toks/dt:.1f} tok/s); decode-step "
-          f"CV={s.get('cv_percent', 0):.2f}%")
+          f"CV={s.get('cv_percent', 0):.2f}%; shed={sched.shed_count}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=1,
+                    help="concurrent client connections")
+    ap.add_argument("--pipeline", type=int, default=4,
+                    help="in-flight pipelined requests per connection")
     ap.add_argument("--lm", action="store_true")
     args = ap.parse_args()
     if args.lm:
         serve_lm(args.requests)
     else:
-        serve_resnet(args.requests, args.batch)
+        serve_resnet(args.requests, args.batch, args.clients, args.pipeline)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,7 @@ from repro.core.rtpm import Telemetry
 from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import transformer as tf
 from repro.models.common import init_params, is_spec
+from repro.serving.scheduler import ScheduledRequest
 
 
 def pack_params_image(params) -> bytes:
@@ -66,6 +67,10 @@ class Request:
     max_new: int = 16
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    priority: int = 1             # admission priority (lower = more urgent)
+    deadline: Optional[float] = None   # absolute monotonic seconds
+    shed: bool = False            # shed by the admission policy
+    verdict: str = ""             # admission outcome ("admitted"/"shed: ...")
 
 
 class ServingEngine:
@@ -111,31 +116,58 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- api
     def submit(self, req: Request) -> None:
-        self._queue.append(req)
+        """Enqueue a request. With a scheduler attached the request routes
+        through ``DeadlineScheduler.submit`` so admission (and shedding)
+        happens at ``_admit`` time; without one, plain FIFO."""
+        if self.scheduler is not None:
+            self.scheduler.submit(ScheduledRequest(
+                rid=req.rid, tokens_needed=req.max_new,
+                priority=req.priority, deadline=req.deadline, payload=req))
+        else:
+            self._queue.append(req)
+
+    def _pop_admitted(self, free_slots: int) -> list:
+        """Next requests to place into free slots: scheduler admission
+        (priority + EDF + shedding) when attached, FIFO otherwise."""
+        if self.scheduler is None:
+            out, self._queue = (self._queue[:free_slots],
+                                self._queue[free_slots:])
+            return out
+        admitted = []
+        for s in self.scheduler.admit(free_slots):
+            if s.payload is not None:
+                s.payload.verdict = s.verdict
+                admitted.append(s.payload)
+        for s in self.scheduler.drain_shed():
+            # shed == done, with a caller-observable verdict: the request
+            # never reaches a slot, so no compute is spent on it
+            r = s.payload
+            if r is not None:
+                r.shed, r.verdict, r.done = True, s.verdict, True
+        return admitted
 
     def _admit(self) -> None:
-        for i in range(self.max_batch):
-            if self._slots[i] is None and self._queue:
-                req = self._queue.pop(0)
-                self._slots[i] = req
-                # per-slot prefill (batch=1 prompt padded into the slot)
-                prompt = jnp.asarray(req.prompt)[None, :]
-                logits, cache = self._prefill(self.params,
-                                              {"inputs": prompt})
-                # splice the prompt's KV into this slot of the shared cache
-                plen = req.prompt.shape[0]
-                for key in self._cache:
-                    c = self._cache[key]
-                    src = cache[key].astype(c.dtype)
-                    if key in ("k", "v"):
-                        self._cache[key] = jax.lax.dynamic_update_slice(
-                            c, src, (0, i, 0, 0, 0))
-                    else:                        # recurrent states (L,B,...)
-                        self._cache[key] = jax.lax.dynamic_update_slice(
-                            c, src, (0, i) + (0,) * (c.ndim - 2))
-                self._pos[i] = plen
-                tok = int(jnp.argmax(logits[0]))
-                req.out_tokens.append(tok)
+        free = [i for i in range(self.max_batch) if self._slots[i] is None]
+        for i, req in zip(free, self._pop_admitted(len(free))):
+            self._slots[i] = req
+            # per-slot prefill (batch=1 prompt padded into the slot)
+            prompt = jnp.asarray(req.prompt)[None, :]
+            logits, cache = self._prefill(self.params,
+                                          {"inputs": prompt})
+            # splice the prompt's KV into this slot of the shared cache
+            plen = req.prompt.shape[0]
+            for key in self._cache:
+                c = self._cache[key]
+                src = cache[key].astype(c.dtype)
+                if key in ("k", "v"):
+                    self._cache[key] = jax.lax.dynamic_update_slice(
+                        c, src, (0, i, 0, 0, 0))
+                else:                        # recurrent states (L,B,...)
+                    self._cache[key] = jax.lax.dynamic_update_slice(
+                        c, src, (0, i) + (0,) * (c.ndim - 2))
+            self._pos[i] = plen
+            tok = int(jnp.argmax(logits[0]))
+            req.out_tokens.append(tok)
 
     def step(self) -> int:
         """One decode step across all live slots. Returns #live."""
@@ -169,7 +201,13 @@ class ServingEngine:
                 self._slots[i] = None
         return len(live)
 
+    def pending(self) -> int:
+        """Requests waiting for a slot (wherever they queue)."""
+        if self.scheduler is not None:
+            return self.scheduler.pending()
+        return len(self._queue)
+
     def run_until_drained(self, max_steps: int = 10_000) -> None:
         for _ in range(max_steps):
-            if self.step() == 0 and not self._queue:
+            if self.step() == 0 and self.pending() == 0:
                 return

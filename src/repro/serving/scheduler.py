@@ -5,14 +5,21 @@ protecting at the scheduler level too. This admission policy orders the
 queue by (priority, earliest deadline) and sheds requests whose deadline
 cannot be met given the measured per-step latency — bounded-tardiness
 behaviour instead of queue-length-dependent tail blowup.
+
+Thread-safety: ``submit`` may be called from any producer thread
+(connection handlers, client code) while a single dispatcher thread calls
+``admit``/``drain_shed`` — the heap is guarded by a lock. Shed requests
+are queued on the side and drained by the dispatcher, which marks their
+payloads done with the shed verdict (the caller-observable outcome).
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
+import threading
 import time
-from typing import Callable, Optional
+from typing import Any, Callable, Optional
 
 
 @dataclasses.dataclass(order=False)
@@ -23,6 +30,9 @@ class ScheduledRequest:
     deadline: Optional[float] = None    # absolute seconds (monotonic)
     admitted: bool = False
     shed: bool = False
+    verdict: str = ""                   # admission outcome, human-readable
+    payload: Any = None                 # caller's request object (e.g.
+                                        # engine.Request / a reply route)
 
 
 class DeadlineScheduler:
@@ -32,6 +42,8 @@ class DeadlineScheduler:
         self.clock = clock
         self._heap: list = []
         self._ctr = itertools.count()
+        self._lock = threading.Lock()
+        self._shed: list[ScheduledRequest] = []
         self.shed_count = 0
 
     # ------------------------------------------------------------------ api
@@ -43,7 +55,8 @@ class DeadlineScheduler:
         key = (req.priority,
                req.deadline if req.deadline is not None else float("inf"),
                next(self._ctr))
-        heapq.heappush(self._heap, (key, req))
+        with self._lock:
+            heapq.heappush(self._heap, (key, req))
 
     def eta(self, req: ScheduledRequest, queue_depth: int) -> float:
         """Predicted completion time if admitted now."""
@@ -54,19 +67,41 @@ class DeadlineScheduler:
 
         Returns admitted requests (priority + EDF order). Shedding happens
         at admission — before any compute is spent — keeping live-slot
-        latency flat (the determinism property).
+        latency flat (the determinism property). Shed requests land in the
+        side queue for ``drain_shed`` so the dispatcher can fail them back
+        to their callers with the verdict.
         """
         out: list[ScheduledRequest] = []
-        depth = len(self._heap)
-        while self._heap and len(out) < free_slots:
-            _, req = heapq.heappop(self._heap)
-            if req.deadline is not None and \
-                    self.eta(req, len(out)) > req.deadline:
-                req.shed = True
-                self.shed_count += 1
-                continue
-            req.admitted = True
-            out.append(req)
+        with self._lock:
+            while self._heap and len(out) < free_slots:
+                _, req = heapq.heappop(self._heap)
+                if req.deadline is not None:
+                    eta = self.eta(req, len(out))
+                    if eta > req.deadline:
+                        req.shed = True
+                        req.verdict = (f"shed: eta {eta:.4f}s past deadline "
+                                       f"{req.deadline:.4f}s "
+                                       f"(est {self.est:.4f}s/step)")
+                        self.shed_count += 1
+                        self._shed.append(req)
+                        continue
+                req.admitted = True
+                req.verdict = "admitted"
+                out.append(req)
+        return out
+
+    def drain_shed(self) -> list:
+        """Hand back (and clear) requests shed since the last drain."""
+        with self._lock:
+            out, self._shed = self._shed, []
+        return out
+
+    def drain_pending(self) -> list:
+        """Remove and return everything still queued (forced shutdown:
+        the caller owes each request an explicit refusal)."""
+        with self._lock:
+            out = [req for _, req in self._heap]
+            self._heap.clear()
         return out
 
     def pending(self) -> int:

@@ -1,39 +1,156 @@
 """Network-attached inference service (RTPM host-connectivity role).
 
-A socket server speaking the CRC-framed protocol: a client PROVISIONs a
-model (RIMFS image + RCB program bytes), then streams INFER_REQUESTs; the
-server executes them through the generic RCB executor and answers with
-INFER_RESPONSEs plus TELEMETRY on demand — the paper's "baremetal runtime as
-a network-attached inference service" operating mode.
+A socket server speaking the CRC-framed protocol (v1 + v2). The v2 frame
+extension (per-frame ``request_id`` + flags) lets one connection pipeline
+many INFER_REQUESTs and receive the responses out of order.
+
+Concurrency model — **all device state behind one thread**: connection
+handler threads only *parse* frames and enqueue work; a single dispatcher
+thread (an ``rtpm.ServiceLoop`` worker, heartbeat-monitored like any tile
+worker) owns the ``Platform``, the ``Executor``, the bound program, the
+optional ``ServingEngine`` and the optional ``TileMesh``. Handler-side
+shared-state races are eliminated by ownership, not by locks.
+
+Flow per request:
+
+  handler thread:  recv_frame -> parse npz + admission metadata
+                   -> plain RCB INFER: ScheduledRequest into the
+                      DeadlineScheduler (deadline anchored HERE, so queue
+                      wait counts against it) + a dispatcher kick;
+                      admission-cap overflow -> immediate ERROR/F_BUSY
+                   -> everything else: ServiceLoop.submit
+                      (queue full -> immediate ERROR/F_BUSY)
+  dispatcher:      drains the scheduler through admit(1) in priority/EDF
+                   order -> shed? ERROR/F_SHED with the verdict, before
+                   any compute -> else linked Executor path, or
+                   partitioned over a TileMesh when one is attached;
+                   LM prompts go to ServingEngine continuous batching
+                   (pumped between queue pops via the loop's on_idle
+                   hook; replies routed back by request id)
+  SHUTDOWN:        graceful drain — queued work is answered, then stop.
 """
 from __future__ import annotations
 
+import dataclasses
+import itertools
 import socket
+import struct
 import threading
 import time
-from typing import Callable, Optional
+from typing import Any, Optional
 
 import numpy as np
 
 from repro.core.executor import Executor
-from repro.core.rtpm import Platform
+from repro.core.rtpm import Platform, ServiceLoop
 from repro.serving import protocol as proto
+from repro.serving.scheduler import DeadlineScheduler, ScheduledRequest
+
+
+class ServerBusy(RuntimeError):
+    """Reply carried F_BUSY/F_DRAINING: backpressure, retry later."""
+
+
+class RequestShed(RuntimeError):
+    """Reply carried F_SHED: admission policy shed the request."""
+
+
+class _Route:
+    """Reply path to one connection: socket + send lock (the dispatcher
+    and the connection's handler thread may both write to it).
+
+    ``SO_SNDTIMEO`` bounds how long a non-reading client can stall the
+    dispatcher — on timeout the route dies and the peer is on its own,
+    instead of head-of-line blocking every other connection. The kernel
+    option only affects sends, so the handler's blocking recv on the same
+    socket is untouched (``settimeout`` would flip the shared file
+    description to non-blocking and break it)."""
+
+    def __init__(self, conn: socket.socket, send_timeout: float = 30.0):
+        self.conn = conn
+        if send_timeout:
+            sec = int(send_timeout)
+            usec = int((send_timeout - sec) * 1e6)
+            conn.setsockopt(socket.SOL_SOCKET, socket.SO_SNDTIMEO,
+                            struct.pack("ll", sec, usec))
+        self.lock = threading.Lock()
+        self.alive = True
+
+    def send(self, kind: proto.Msg, payload: bytes, rid: int = 0,
+             version: int = 1, flags: int = 0) -> bool:
+        if not self.alive:
+            return False
+        try:
+            with self.lock:
+                if version >= 2:
+                    proto.send_frame(self.conn, kind, payload,
+                                     request_id=rid, flags=flags)
+                else:
+                    proto.send_frame(self.conn, kind, payload)
+            return True
+        except (OSError, ValueError):
+            self.alive = False
+            # tear the connection down rather than leaving the peer
+            # blocked on a truncated frame (and the handler feeding more
+            # work to a route that can no longer answer)
+            try:
+                self.conn.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            return False
+
+    def close(self) -> None:
+        """Retire the route (the handler's ``with conn`` owns the socket)."""
+        self.alive = False
+
+
+@dataclasses.dataclass
+class _Work:
+    frame: Optional[proto.Frame]        # None == dispatcher kick
+    route: Optional[_Route]
+    tensors: Optional[dict] = None      # parsed npz (INFER, LM path)
+    meta: Optional[dict] = None         # admission metadata (LM path)
+
+
+_KICK = _Work(frame=None, route=None)   # wake the dispatcher to drain
 
 
 class InferenceServer:
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
-                 artifacts: Optional[dict] = None):
+                 artifacts: Optional[dict] = None, engine=None, mesh=None,
+                 scheduler: Optional[DeadlineScheduler] = None,
+                 max_queue: int = 128, max_frame: int = proto.MAX_FRAME,
+                 send_timeout: float = 30.0):
         self.platform = Platform()
         self.executor = Executor(rtpm=self.platform)
         self.artifacts = artifacts or {}
+        self.engine = engine            # optional ServingEngine (LM path)
+        self.mesh = mesh                # optional TileMesh (partitioned path)
+        # NOTE: the plain-RCB path and the engine each get their OWN
+        # scheduler — a shared heap would let admit(1) pop the other
+        # path's entries (different payload shapes, misrouted replies)
+        self.scheduler = scheduler or DeadlineScheduler()
+        if engine is not None and engine.scheduler is None:
+            engine.scheduler = DeadlineScheduler()
+        self.max_frame = max_frame
+        self.max_queue = max_queue
+        self.send_timeout = send_timeout
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
-        self._sock.listen(8)
+        self._sock.listen(16)
         self.address = self._sock.getsockname()
         self._bound = None
+        self._inflight: dict = {}       # iid -> (Request, _Route, rid, ver)
+        self._iid = itertools.count(1)
         self._stop = threading.Event()
+        self._stop_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
+        # the dispatcher: the ONE thread that touches device state
+        self._loop = ServiceLoop(self.platform, self._dispatch_one,
+                                 name="dispatcher", max_queue=max_queue,
+                                 on_idle=self._on_idle,
+                                 on_drop=self._drop_work)
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> tuple:
@@ -41,16 +158,34 @@ class InferenceServer:
         self._thread.start()
         return self.address
 
-    def stop(self) -> None:
-        self._stop.set()
-        try:
-            # unblock accept()
-            socket.create_connection(self.address, timeout=1).close()
-        except OSError:
-            pass
-        if self._thread:
+    def stop(self, drain: bool = True) -> None:
+        with self._stop_lock:
+            if not self._stop.is_set():
+                self._stop.set()
+                try:
+                    # unblock accept()
+                    socket.create_connection(self.address, timeout=1).close()
+                except OSError:
+                    pass
+                self._loop.close(drain=drain)
+                # every accepted request still gets an explicit refusal:
+                # a forced stop leaves the whole backlog, a graceful one
+                # only stragglers that raced the dispatcher's exit
+                payload = proto.pack_json({"error": "draining"})
+                for s in self.scheduler.drain_pending():
+                    r, srid, sver, _ = s.payload
+                    r.send(proto.Msg.ERROR, payload, rid=srid,
+                           flags=proto.F_DRAINING, version=sver)
+                if not self._loop.alive():
+                    # only touch dispatcher-owned state once the worker is
+                    # really gone (a wedged worker may still resume)
+                    for req, route, rid, ver in self._inflight.values():
+                        route.send(proto.Msg.ERROR, payload, rid=rid,
+                                   flags=proto.F_DRAINING, version=ver)
+                    self._inflight.clear()
+                self._sock.close()
+        if self._thread and self._thread is not threading.current_thread():
             self._thread.join(timeout=5)
-        self._sock.close()
 
     # ------------------------------------------------------------- serving
     def _serve(self) -> None:
@@ -67,41 +202,265 @@ class InferenceServer:
             t.start()
 
     def _handle(self, conn: socket.socket) -> None:
+        """Per-connection frame pump: parse + enqueue ONLY — device state
+        is never touched from here."""
+        route = _Route(conn, send_timeout=self.send_timeout)
         with conn:
-            while not self._stop.is_set():
-                try:
-                    kind, payload = proto.recv_frame(conn)
-                except (ConnectionError, OSError):
+            try:
+                self._pump_frames(conn, route)
+            finally:
+                route.close()
+
+    def _pump_frames(self, conn: socket.socket, route: _Route) -> None:
+        while not self._stop.is_set():
+            try:
+                frame = proto.recv_frame_ex(conn, max_frame=self.max_frame)
+            except (ConnectionError, OSError):
+                return
+            except proto.ProtocolError as e:
+                # malformed frame mid-stream: report + close cleanly
+                # (previously this escaped the guard and silently killed
+                # the handler thread). Sent as a v2 frame with the
+                # reserved id 0 so pipelined waiters don't mistake the
+                # connection-level error for their own reply.
+                route.send(proto.Msg.ERROR,
+                           proto.pack_json({"error": f"protocol: {e}"}),
+                           rid=0, version=2)
+                return
+            try:
+                if frame.kind == proto.Msg.HEARTBEAT:
+                    self.platform.heartbeats.beat(
+                        proto.unpack_json(frame.payload).get("worker", "?"))
+                elif frame.kind == proto.Msg.SHUTDOWN:
+                    route.send(proto.Msg.TELEMETRY,
+                               proto.pack_json({"status": "draining"}),
+                               rid=frame.request_id, version=frame.version)
+                    self.stop(drain=True)       # graceful: queued work runs
                     return
+                elif frame.kind == proto.Msg.INFER_REQUEST:
+                    self._enqueue_infer(frame, route)
+                elif not self._loop.submit(_Work(frame, route)):
+                    flags = proto.F_DRAINING if self._stop.is_set() \
+                        else proto.F_BUSY
+                    route.send(
+                        proto.Msg.ERROR,
+                        proto.pack_json(
+                            {"error": "busy: dispatch queue full",
+                             "pending": self._loop.depth()}),
+                        rid=frame.request_id, flags=flags,
+                        version=frame.version)
+            except Exception as e:              # report, keep serving
+                route.send(proto.Msg.ERROR,
+                           proto.pack_json({"error": str(e)}),
+                           rid=frame.request_id, version=frame.version)
+
+    def _enqueue_infer(self, frame: proto.Frame, route: _Route) -> None:
+        """Handler-thread half of an INFER_REQUEST: parse the npz +
+        admission metadata, then either enqueue a ScheduledRequest (plain
+        RCB — deadline anchored NOW, so dispatch-queue wait counts
+        against it and priority/EDF can reorder a backlog) or ship the
+        parsed prompt to the dispatcher (LM path, engine state stays
+        single-owner). No device state is touched here."""
+        tensors = proto.unpack_tensors(frame.payload)
+        meta = {k: tensors.pop(k) for k in list(tensors)
+                if k.startswith("__")}
+        priority = int(meta["__priority"]) if "__priority" in meta else 1
+        deadline = None
+        if "__deadline_ms" in meta:
+            deadline = time.monotonic() + float(meta["__deadline_ms"]) / 1e3
+        rid, ver = frame.request_id, frame.version
+
+        if self.engine is not None and "prompt" in tensors:
+            admission = {"priority": priority, "deadline": deadline,
+                         "max_new": int(meta.get("__max_new", 16))}
+            if not self._loop.submit(_Work(frame, route, tensors=tensors,
+                                           meta=admission)):
+                route.send(proto.Msg.ERROR,
+                           proto.pack_json(
+                               {"error": "busy: dispatch queue full"}),
+                           rid=rid, flags=proto.F_BUSY, version=ver)
+            return
+
+        if self.scheduler.pending() >= self.max_queue:
+            self._loop.reject()
+            route.send(proto.Msg.ERROR,
+                       proto.pack_json(
+                           {"error": "busy: admission queue full",
+                            "pending": self.scheduler.pending()}),
+                       rid=rid, flags=proto.F_BUSY, version=ver)
+            return
+        # the kick IS the admission ticket: an accepted kick guarantees a
+        # live dispatcher will drain this request (the idle hook covers
+        # the kick-lands-first race); a refused kick means the dispatcher
+        # is full or draining, so the request is refused too — never
+        # parked where nothing will ever answer it
+        if not self._loop.submit(_KICK):
+            flags = proto.F_DRAINING if self._stop.is_set() \
+                else proto.F_BUSY
+            route.send(proto.Msg.ERROR,
+                       proto.pack_json({"error": "busy: dispatch queue "
+                                        "full"}),
+                       rid=rid, flags=flags, version=ver)
+            return
+        self.scheduler.submit(ScheduledRequest(
+            rid=rid, tokens_needed=1, priority=priority, deadline=deadline,
+            payload=(route, rid, ver, tensors)))
+
+    # ---------------------------------------------------------- dispatcher
+    def _dispatch_one(self, work: _Work) -> None:
+        """Runs ONLY on the ServiceLoop worker thread."""
+        if work.frame is None:                  # kick: drain the admission q
+            self._drain_plain()
+            return
+        frame, route = work.frame, work.route
+        rid, ver = frame.request_id, frame.version
+        try:
+            if frame.kind == proto.Msg.PROVISION:
+                self._provision(frame.payload)
+                route.send(proto.Msg.TELEMETRY,
+                           proto.pack_json({"status": "ready"}),
+                           rid=rid, version=ver)
+            elif frame.kind == proto.Msg.INFER_REQUEST:
+                self._infer_lm(work)
+            elif frame.kind == proto.Msg.TELEMETRY:
+                route.send(proto.Msg.TELEMETRY,
+                           proto.pack_json(self._telemetry_summary()),
+                           rid=rid, version=ver)
+            else:
+                raise RuntimeError(f"unexpected message {frame.kind!r}")
+        except Exception as e:                  # report, keep serving
+            route.send(proto.Msg.ERROR, proto.pack_json({"error": str(e)}),
+                       rid=rid, version=ver)
+
+    def _drain_plain(self) -> bool:
+        """Drain the plain-RCB admission queue in priority/EDF order:
+        shed infeasible requests with their verdicts, execute the rest
+        through the linked (or partitioned) executor path."""
+        progressed = False
+        while True:
+            admitted = self.scheduler.admit(1)
+            for s in self.scheduler.drain_shed():
+                r, srid, sver, _ = s.payload
+                r.send(proto.Msg.ERROR,
+                       proto.pack_json({"error": "shed",
+                                        "verdict": s.verdict}),
+                       rid=srid, flags=proto.F_SHED, version=sver)
+                progressed = True
+            if not admitted:
+                return progressed
+            for s in admitted:
+                r, srid, sver, sts = s.payload
+                t0 = time.perf_counter()
                 try:
-                    if kind == proto.Msg.PROVISION:
-                        self._provision(payload)
-                        proto.send_frame(conn, proto.Msg.TELEMETRY,
-                                         proto.pack_json({"status": "ready"}))
-                    elif kind == proto.Msg.INFER_REQUEST:
-                        out = self._infer(proto.unpack_tensors(payload))
-                        proto.send_frame(conn, proto.Msg.INFER_RESPONSE,
-                                         proto.pack_tensors(out))
-                    elif kind == proto.Msg.TELEMETRY:
-                        proto.send_frame(
-                            conn, proto.Msg.TELEMETRY,
-                            proto.pack_json(
-                                self.platform.telemetry.summary(warmup=1)))
-                    elif kind == proto.Msg.HEARTBEAT:
-                        self.platform.heartbeats.beat(
-                            proto.unpack_json(payload).get("worker", "?"))
-                    elif kind == proto.Msg.SHUTDOWN:
-                        self._stop.set()
-                        return
-                except Exception as e:  # report, keep serving
-                    proto.send_frame(conn, proto.Msg.ERROR,
-                                     proto.pack_json({"error": str(e)}))
+                    out = self._infer(sts)
+                except Exception as e:          # report, keep draining
+                    r.send(proto.Msg.ERROR,
+                           proto.pack_json({"error": str(e)}),
+                           rid=srid, version=sver)
+                else:
+                    dt = time.perf_counter() - t0
+                    self.platform.telemetry.record_latency(dt)
+                    self.scheduler.observe_step_latency(dt)
+                    r.send(proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
+                           rid=srid, version=sver)
+                progressed = True
+
+    def _infer_lm(self, work: _Work) -> None:
+        """LM service program: continuous batching via the engine; the
+        reply is routed back by request id when the slot finishes (see
+        _pump_engine). The engine's queue+slots are bounded the same way
+        the dispatch queue is — pipelining past the cap gets
+        backpressure, not unbounded buffering."""
+        from repro.serving.engine import Request
+        frame, route = work.frame, work.route
+        rid, ver = frame.request_id, frame.version
+        if len(self._inflight) >= self.max_queue:
+            self._loop.reject()
+            route.send(proto.Msg.ERROR,
+                       proto.pack_json(
+                           {"error": "busy: too many in-flight prompts",
+                            "inflight": len(self._inflight)}),
+                       rid=rid, flags=proto.F_BUSY, version=ver)
+            return
+        max_new = work.meta["max_new"]
+        prompt = np.asarray(work.tensors["prompt"]).astype(
+            np.int32).reshape(-1)
+        if prompt.size + max_new >= self.engine.max_seq:
+            raise RuntimeError(
+                f"prompt ({prompt.size} tokens) + max_new ({max_new}) "
+                f"exceeds engine max_seq {self.engine.max_seq}")
+        iid = next(self._iid)
+        req = Request(rid=iid, prompt=prompt, max_new=max_new,
+                      priority=work.meta["priority"],
+                      deadline=work.meta["deadline"])
+        self.engine.submit(req)
+        self._inflight[iid] = (req, route, rid, ver)
+
+    def _on_idle(self) -> bool:
+        plain = self._drain_plain()
+        lm = self._pump_engine()
+        return plain or lm
+
+    def _drop_work(self, work: _Work) -> None:
+        """close(drain=False) hand-back: refuse explicitly, never drop
+        a request whose submit was already acknowledged."""
+        if work.frame is not None:
+            work.route.send(proto.Msg.ERROR,
+                            proto.pack_json({"error": "draining"}),
+                            rid=work.frame.request_id,
+                            flags=proto.F_DRAINING,
+                            version=work.frame.version)
+
+    def _pump_engine(self) -> bool:
+        """ServiceLoop idle hook: one continuous-batching decode step,
+        then route finished (or shed) requests back by id. Returns True
+        while in-flight work remains so the loop keeps spinning hot."""
+        if self.engine is None or not self._inflight:
+            return False
+        try:
+            self.engine.step()
+        except Exception as e:
+            # poisoned engine state would re-raise on every pump and hang
+            # every in-flight client: fail them all explicitly instead
+            for iid, (req, route, rid, ver) in list(self._inflight.items()):
+                route.send(proto.Msg.ERROR,
+                           proto.pack_json({"error": f"engine: {e}"}),
+                           rid=rid, version=ver)
+            self._inflight.clear()
+            raise
+        for iid, (req, route, rid, ver) in list(self._inflight.items()):
+            if not req.done:
+                continue
+            self._inflight.pop(iid, None)
+            if req.shed:
+                route.send(proto.Msg.ERROR,
+                           proto.pack_json({"error": "shed",
+                                            "verdict": req.verdict}),
+                           rid=rid, flags=proto.F_SHED, version=ver)
+            else:
+                route.send(proto.Msg.INFER_RESPONSE,
+                           proto.pack_tensors(
+                               {"tokens": np.asarray(req.out_tokens,
+                                                     np.int32)}),
+                           rid=rid, version=ver)
+        return bool(self._inflight)
+
+    def _telemetry_summary(self) -> dict:
+        s = dict(self.platform.telemetry.summary(warmup=1))
+        shed = self.scheduler.shed_count
+        if self.engine is not None and self.engine.scheduler is not None:
+            shed += self.engine.scheduler.shed_count
+        s["serving"] = {**self._loop.summary(), "shed": shed,
+                        "inflight": len(self._inflight)}
+        if self.engine is not None:
+            s["engine"] = self.engine.telemetry.summary(warmup=1)
+        return s
 
     def _provision(self, payload: bytes) -> None:
         # payload = frame-in-frame: [image_frame][program_frame]
-        k1, image = proto.decode_frame(payload)
+        k1, image = proto.decode_frame(payload, max_frame=self.max_frame)
         rest = payload[proto.HEADER.size + len(image) + 4:]
-        k2, prog = proto.decode_frame(rest)
+        k2, prog = proto.decode_frame(rest, max_frame=self.max_frame)
         self.platform.provision(image=image, program_bytes=prog)
         if self.artifacts:
             self.platform.program.artifacts.update(self.artifacts)
@@ -110,37 +469,146 @@ class InferenceServer:
     def _infer(self, tensors: dict) -> dict:
         if self._bound is None:
             raise RuntimeError("not provisioned")
-        t0 = time.perf_counter()
-        out = self.executor.run(self._bound, inputs=tensors,
-                                rimfs=self.platform.rimfs)
-        self.platform.telemetry.record_latency(time.perf_counter() - t0)
+        if self.mesh is not None:
+            out = self.executor.run_partitioned(
+                self._bound, inputs=tensors, rimfs=self.platform.rimfs,
+                mesh=self.mesh, platform=self.platform)
+        else:
+            out = self.executor.run(self._bound, inputs=tensors,
+                                    rimfs=self.platform.rimfs)
         return {k: np.asarray(v) for k, v in out.items()}
 
 
 # ------------------------------------------------------------------ client
 class Client:
-    def __init__(self, address: tuple):
-        self.sock = socket.create_connection(address)
+    """Protocol v2 client with request pipelining.
 
+    ``infer`` is the synchronous one-shot; ``infer_async``/``result`` pipe
+    many requests down one connection and collect responses out of order
+    (frames for other request ids are parked for their waiters, so one
+    ``Client`` may be shared across threads). ``version=1`` speaks the
+    legacy rid-less protocol for back-compat testing.
+    """
+
+    def __init__(self, address: tuple, version: int = 2,
+                 max_frame: int = proto.MAX_FRAME):
+        self.sock = socket.create_connection(address)
+        self.version = version
+        self.max_frame = max_frame
+        self._send_lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._parked: dict = {}           # rid -> Frame (out-of-order)
+        self._receiving = False
+        self._dead: Optional[BaseException] = None
+        self._rids = itertools.count(1)
+
+    # -------------------------------------------------------------- frames
+    def _send(self, kind: proto.Msg, payload: bytes, rid: int = 0) -> None:
+        with self._send_lock:
+            if self.version >= 2:
+                proto.send_frame(self.sock, kind, payload, request_id=rid)
+            else:
+                proto.send_frame(self.sock, kind, payload)
+
+    def _await(self, rid: int) -> proto.Frame:
+        """Block until the reply for ``rid`` arrives. Exactly one thread
+        receives at a time; frames for other ids are parked and their
+        waiters notified. A receive failure marks the connection dead so
+        every parked waiter errors out instead of waiting forever."""
+        with self._cond:
+            while True:
+                if rid in self._parked:
+                    return self._parked.pop(rid)
+                if self._dead is not None:
+                    raise ConnectionError(
+                        f"connection failed: {self._dead!r}")
+                if not self._receiving:
+                    self._receiving = True
+                    break
+                self._cond.wait()
+        try:
+            while True:
+                try:
+                    f = proto.recv_frame_ex(self.sock,
+                                            max_frame=self.max_frame)
+                except Exception as e:
+                    with self._cond:
+                        self._dead = e
+                    raise
+                # v1 frames carry no id: deliver to the active waiter
+                if f.version == 1 or f.request_id == rid:
+                    return f
+                with self._cond:
+                    self._parked[f.request_id] = f
+                    self._cond.notify_all()
+        finally:
+            with self._cond:
+                self._receiving = False
+                self._cond.notify_all()
+
+    @staticmethod
+    def _raise_error(f: proto.Frame) -> None:
+        info = proto.unpack_json(f.payload)
+        msg = info.get("error", str(info))
+        if f.flags & proto.F_SHED:
+            raise RequestShed(info.get("verdict", msg))
+        if f.flags & (proto.F_BUSY | proto.F_DRAINING):
+            raise ServerBusy(msg)
+        raise RuntimeError(msg)
+
+    def _rpc(self, kind: proto.Msg, payload: bytes) -> proto.Frame:
+        rid = next(self._rids)
+        self._send(kind, payload, rid=rid)
+        f = self._await(rid)
+        if f.kind == proto.Msg.ERROR:
+            self._raise_error(f)
+        return f
+
+    # ----------------------------------------------------------------- api
     def provision(self, image: bytes, program_bytes: bytes) -> dict:
         inner = proto.encode_frame(proto.Msg.PROVISION, image) + \
             proto.encode_frame(proto.Msg.PROVISION, program_bytes)
-        proto.send_frame(self.sock, proto.Msg.PROVISION, inner)
-        kind, payload = proto.recv_frame(self.sock)
-        return proto.unpack_json(payload)
+        return proto.unpack_json(
+            self._rpc(proto.Msg.PROVISION, inner).payload)
 
-    def infer(self, **tensors) -> dict:
-        proto.send_frame(self.sock, proto.Msg.INFER_REQUEST,
-                         proto.pack_tensors(tensors))
-        kind, payload = proto.recv_frame(self.sock)
-        if kind == proto.Msg.ERROR:
-            raise RuntimeError(proto.unpack_json(payload)["error"])
-        return proto.unpack_tensors(payload)
+    def infer_async(self, deadline_ms: Optional[float] = None,
+                    priority: Optional[int] = None,
+                    max_new: Optional[int] = None, **tensors) -> int:
+        """Send one pipelined INFER_REQUEST; returns its request id.
+        Admission metadata rides as reserved ``__``-prefixed npz entries."""
+        rid = next(self._rids)
+        meta: dict = {}
+        if deadline_ms is not None:
+            meta["__deadline_ms"] = np.float64(deadline_ms)
+        if priority is not None:
+            meta["__priority"] = np.int32(priority)
+        if max_new is not None:
+            meta["__max_new"] = np.int32(max_new)
+        self._send(proto.Msg.INFER_REQUEST,
+                   proto.pack_tensors({**tensors, **meta}), rid=rid)
+        return rid
+
+    def result(self, rid: int) -> dict:
+        """Collect the response for a pipelined request id (any order)."""
+        f = self._await(rid)
+        if f.kind == proto.Msg.ERROR:
+            self._raise_error(f)
+        return proto.unpack_tensors(f.payload)
+
+    def infer(self, deadline_ms: Optional[float] = None,
+              priority: Optional[int] = None,
+              max_new: Optional[int] = None, **tensors) -> dict:
+        return self.result(self.infer_async(deadline_ms=deadline_ms,
+                                            priority=priority,
+                                            max_new=max_new, **tensors))
 
     def telemetry(self) -> dict:
-        proto.send_frame(self.sock, proto.Msg.TELEMETRY, b"")
-        _, payload = proto.recv_frame(self.sock)
-        return proto.unpack_json(payload)
+        return proto.unpack_json(self._rpc(proto.Msg.TELEMETRY, b"").payload)
+
+    def shutdown(self) -> dict:
+        """Graceful server drain; returns the server's drain ack."""
+        return proto.unpack_json(
+            self._rpc(proto.Msg.SHUTDOWN, b"").payload)
 
     def close(self) -> None:
         self.sock.close()

@@ -1,6 +1,10 @@
 """RTPM: event dispatch, heartbeats/stragglers, telemetry CV, provisioning,
-and tile-group fault injection (kill a worker mid-program -> heartbeat
-detection -> stage re-queue on a survivor -> reference-identical output)."""
+the ServiceLoop dispatcher worker, and tile-group fault injection (kill a
+worker mid-program -> heartbeat detection -> stage re-queue on a survivor
+-> reference-identical output)."""
+import threading
+import time
+
 import numpy as np
 
 import jax
@@ -8,7 +12,7 @@ import jax
 from repro.core import rbl, rctc, rhal, rimfs
 from repro.core.executor import Executor
 from repro.core.rtpm import EventDispatcher, HeartbeatMonitor, Platform, \
-    Telemetry
+    ServiceLoop, Telemetry
 
 
 def test_event_dispatch_fanout():
@@ -84,6 +88,174 @@ def test_platform_rejects_corrupt_image(rng):
     img[-2] ^= 0xFF
     with pytest.raises(RIMFSError):
         Platform().provision(image=bytes(img))
+
+
+# ---------------------------------------------------------------------------
+# ServiceLoop (the single-owner dispatcher worker)
+# ---------------------------------------------------------------------------
+
+def _wait_until(pred, timeout=10.0):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() > deadline:
+            return False
+        time.sleep(0.005)
+    return True
+
+
+def test_service_loop_processes_in_order_and_heartbeats():
+    plat = Platform()
+    seen = []
+    loop = ServiceLoop(plat, seen.append, name="w0", max_queue=16,
+                       poll=0.01)
+    try:
+        assert all(loop.submit(i) for i in range(5))
+        assert _wait_until(lambda: len(seen) == 5)
+        assert seen == [0, 1, 2, 3, 4]        # one thread, FIFO order
+        w = plat.heartbeats.workers["w0"]
+        assert w.alive and w.step == 5
+        assert loop.stats["processed"] == 5
+        assert loop.queue_wait.summary()["n"] == 5
+    finally:
+        loop.close()
+
+
+def test_service_loop_backpressure_then_drain():
+    plat = Platform()
+    gate = threading.Event()
+    started = threading.Event()
+    seen = []
+
+    def handler(item):
+        started.set()
+        gate.wait(10)
+        seen.append(item)
+
+    loop = ServiceLoop(plat, handler, max_queue=2, poll=0.01)
+    assert loop.submit("a")
+    assert started.wait(5)                    # "a" dequeued, worker gated
+    assert loop.submit("b") and loop.submit("c")
+    assert not loop.submit("d")               # queue full -> rejected
+    assert loop.stats["rejected"] == 1
+    gate.set()
+    loop.close(drain=True)                    # graceful: b/c still processed
+    assert seen == ["a", "b", "c"]
+    assert not loop.submit("e")               # draining rejects new work
+    assert loop.stats["rejected"] == 2
+
+
+def test_service_loop_handler_error_does_not_kill_worker():
+    plat = Platform()
+    seen = []
+
+    def handler(item):
+        if item == "boom":
+            raise RuntimeError("boom")
+        seen.append(item)
+
+    loop = ServiceLoop(plat, handler, poll=0.01)
+    try:
+        loop.submit("boom")
+        loop.submit("ok")
+        assert _wait_until(lambda: seen == ["ok"])
+        assert loop.stats["errors"] == 1
+        assert loop.stats["processed"] == 2
+    finally:
+        loop.close()
+
+
+def test_service_loop_on_idle_pumps_between_items():
+    plat = Platform()
+    pumped = {"n": 0, "left": 3}
+
+    def on_idle():
+        if pumped["left"] > 0:
+            pumped["left"] -= 1
+            pumped["n"] += 1
+            return True
+        return False
+
+    loop = ServiceLoop(plat, lambda item: None, poll=0.01, on_idle=on_idle)
+    try:
+        assert _wait_until(lambda: pumped["n"] == 3)
+    finally:
+        loop.close()
+
+
+def test_service_loop_accepted_submits_survive_racing_close():
+    """A submit that returned True is never silently dropped by a
+    concurrent close(drain=True): the drain sentinel always lands after
+    every accepted item."""
+    plat = Platform()
+    seen = []
+    loop = ServiceLoop(plat, seen.append, max_queue=4096, poll=0.005)
+    accepted = []
+
+    def produce(base):
+        for i in range(300):
+            if loop.submit(base + i):
+                accepted.append(base + i)
+
+    producers = [threading.Thread(target=produce, args=(t * 1000,))
+                 for t in range(4)]
+    closer = threading.Thread(target=lambda: loop.close(drain=True))
+    for t in producers:
+        t.start()
+    closer.start()
+    for t in producers:
+        t.join()
+    closer.join()
+    assert set(accepted) <= set(seen)
+
+
+def test_service_loop_forced_close_hands_back_dropped_items():
+    """close(drain=False) never silently discards accepted work — every
+    dropped item goes to on_drop so its submitter can be refused."""
+    plat = Platform()
+    gate = threading.Event()
+    started = threading.Event()
+    handled, dropped = [], []
+
+    def handler(item):
+        started.set()
+        gate.wait(10)
+        handled.append(item)
+
+    loop = ServiceLoop(plat, handler, max_queue=8, poll=0.01,
+                       on_drop=dropped.append)
+    assert loop.submit("a")
+    assert started.wait(5)                    # worker holds "a"
+    assert loop.submit("b") and loop.submit("c")
+    closer = threading.Thread(target=lambda: loop.close(drain=False))
+    closer.start()
+    deadline = time.monotonic() + 5
+    while len(dropped) < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert dropped == ["b", "c"]              # refused, not vanished
+    gate.set()
+    closer.join(timeout=10)
+    assert handled == ["a"]
+
+
+def test_event_dispatcher_concurrent_posts_lose_nothing():
+    d = EventDispatcher()
+    seen = []
+    d.register("tick", lambda p: seen.append(p["v"]))
+    n_threads, per_thread = 4, 200
+
+    def produce(base):
+        for i in range(per_thread):
+            d.post("tick", {"v": base + i})
+
+    threads = [threading.Thread(target=produce, args=(t * 1000,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    d.process()
+    assert sorted(seen) == sorted(t * 1000 + i for t in range(n_threads)
+                                  for i in range(per_thread))
 
 
 # ---------------------------------------------------------------------------

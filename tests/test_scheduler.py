@@ -41,3 +41,50 @@ def test_latency_ewma_moves_estimate():
     for _ in range(50):
         s.observe_step_latency(0.05)
     assert abs(s.est - 0.05) < 5e-3
+
+
+def test_shed_requests_drain_once_with_verdict():
+    s, clock = _sched(est=1.0)
+    clock["t"] = 5.0
+    r = ScheduledRequest(1, tokens_needed=100, deadline=6.0, payload="me")
+    s.submit(r)
+    assert s.admit(free_slots=1) == []
+    shed = s.drain_shed()
+    assert shed == [r] and r.shed and not r.admitted
+    assert "shed" in r.verdict and r.payload == "me"
+    assert s.drain_shed() == []          # drained exactly once
+
+
+def test_admitted_requests_carry_verdict():
+    s, _ = _sched()
+    r = ScheduledRequest(1, tokens_needed=2)
+    s.submit(r)
+    assert s.admit(free_slots=1) == [r]
+    assert r.admitted and r.verdict == "admitted"
+
+
+def test_concurrent_submit_admit_loses_nothing():
+    """Producer threads submit while a dispatcher admits: every request
+    comes out exactly once (admitted or shed), none vanish."""
+    import threading
+    s, _ = _sched()
+    n_threads, per_thread = 4, 50
+    out: list = []
+
+    def produce(base):
+        for i in range(per_thread):
+            s.submit(ScheduledRequest(base + i, tokens_needed=1))
+
+    threads = [threading.Thread(target=produce, args=(t * 1000,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    deadline = 200
+    while len(out) < n_threads * per_thread and deadline:
+        out.extend(s.admit(free_slots=7))
+        deadline -= 1
+    for t in threads:
+        t.join()
+    out.extend(s.admit(free_slots=n_threads * per_thread))
+    rids = [r.rid for r in out]
+    assert len(rids) == len(set(rids)) == n_threads * per_thread

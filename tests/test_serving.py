@@ -31,6 +31,42 @@ def test_frame_crc_detects_corruption():
         proto.decode_frame(bytes(frame))
 
 
+def test_frame_v2_roundtrip_carries_request_id_and_flags():
+    payload = b"response" * 16
+    f = proto.decode_frame_ex(proto.encode_frame(
+        proto.Msg.INFER_RESPONSE, payload, request_id=77,
+        flags=proto.F_SHED))
+    assert f.kind == proto.Msg.INFER_RESPONSE and f.payload == payload
+    assert f.request_id == 77 and f.flags == proto.F_SHED and f.version == 2
+
+
+def test_frame_v1_decodes_through_extended_decoder():
+    f = proto.decode_frame_ex(proto.encode_frame(proto.Msg.HEARTBEAT, b"hb"))
+    assert (f.kind, f.payload, f.request_id, f.flags, f.version) == \
+        (proto.Msg.HEARTBEAT, b"hb", 0, 0, 1)
+
+
+def test_frame_v2_crc_detects_corruption():
+    frame = bytearray(proto.encode_frame(proto.Msg.INFER_RESPONSE,
+                                         b"y" * 64, request_id=3))
+    frame[22] ^= 1
+    with pytest.raises(proto.ProtocolError, match="CRC"):
+        proto.decode_frame_ex(bytes(frame))
+
+
+def test_decode_frame_enforces_length_cap_before_parsing():
+    head = proto.HEADER.pack(proto.MAGIC, int(proto.Msg.INFER_REQUEST),
+                             0xFFFF_FFF0)
+    with pytest.raises(proto.ProtocolError, match="MAX_FRAME"):
+        proto.decode_frame_ex(head, max_frame=1 << 10)
+
+
+def test_decode_frame_rejects_unknown_type():
+    head = proto.HEADER.pack(proto.MAGIC, 0x55, 0)
+    with pytest.raises(proto.ProtocolError, match="unknown"):
+        proto.decode_frame_ex(head + b"\x00" * 4)
+
+
 def test_tensor_payload_roundtrip(rng):
     t = {"a": rng.randn(3, 4).astype(np.float32),
          "b": rng.randint(0, 9, (2,), dtype=np.int32)}
@@ -98,6 +134,31 @@ def test_engine_feeds_scheduler_latency_ewma(rng):
     # far below 123 s on any machine)
     assert sched.est < 123.0
     assert sched.est > 0.0
+
+
+def test_engine_routes_through_scheduler_and_sheds(rng):
+    """ISSUE 4 satellite: submit() routes through scheduler.submit and
+    _admit() through scheduler.admit — an infeasible deadline is shed
+    BEFORE any compute, marked done with an observable verdict."""
+    import time as time_mod
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    sched = DeadlineScheduler()
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=64,
+                        scheduler=sched)
+    prompt = rng.randint(0, cfg.vocab_size, (4,)).astype(np.int32)
+    good = Request(rid=0, prompt=prompt, max_new=3)
+    bad = Request(rid=1, prompt=prompt, max_new=3,
+                  deadline=time_mod.monotonic() - 1.0)   # already past
+    eng.submit(good)
+    eng.submit(bad)
+    assert sched.pending() == 2       # queued in the scheduler, not FIFO
+    eng.run_until_drained()
+    assert bad.done and bad.shed and "shed" in bad.verdict
+    assert bad.out_tokens == []       # no compute spent on the shed request
+    assert good.done and not good.shed and good.verdict == "admitted"
+    assert len(good.out_tokens) >= 3
+    assert sched.shed_count == 1
 
 
 def test_engine_from_rimfs_zero_reupload(rng):

@@ -28,7 +28,11 @@ def test_four_phase_execution_flow(rng):
 
 def test_fused_mean_latency_below_eager(rng):
     """Paper Table 3 mechanism: the single-dispatch path is faster than the
-    op-at-a-time path on the same RCB program."""
+    op-at-a-time path on the same RCB program. Sampled steady-state (GC
+    parked, median) per the benchmark methodology so a collection pause
+    elsewhere in the suite cannot flip a microsecond-scale comparison."""
+    import gc
+
     prog = rctc.compile_matmul(64)
     a = rng.randn(64, 64).astype(np.float32)
     b = rng.randn(64, 64).astype(np.float32)
@@ -36,24 +40,31 @@ def test_fused_mean_latency_below_eager(rng):
     ex = Executor()
 
     bound = rbl.bind(prog, rimfs=fs, inputs={"a": a})
-    eager_lat = []
-    for _ in range(60):
-        t0 = time.perf_counter()
-        ex.run(bound)
-        eager_lat.append(time.perf_counter() - t0)
-
     bound2 = rbl.bind(prog, rimfs=fs)
     fused = ex.fuse(bound2)
     w = ex.weights_from(bound2)
     fused({"a": a}, w)["output"].block_until_ready()    # compile
-    fused_lat = []
-    for _ in range(60):
-        t0 = time.perf_counter()
-        fused({"a": a}, w)["output"].block_until_ready()
-        fused_lat.append(time.perf_counter() - t0)
 
-    e_mu = float(np.mean(eager_lat[10:]))
-    f_mu = float(np.mean(fused_lat[10:]))
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        eager_lat = []
+        for _ in range(60):
+            t0 = time.perf_counter()
+            ex.run(bound)
+            eager_lat.append(time.perf_counter() - t0)
+        fused_lat = []
+        for _ in range(60):
+            t0 = time.perf_counter()
+            fused({"a": a}, w)["output"].block_until_ready()
+            fused_lat.append(time.perf_counter() - t0)
+    finally:
+        if was_enabled:
+            gc.enable()
+
+    e_mu = float(np.median(eager_lat[10:]))
+    f_mu = float(np.median(fused_lat[10:]))
     assert f_mu < e_mu, (e_mu, f_mu)
 
 
