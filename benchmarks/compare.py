@@ -1,0 +1,69 @@
+"""Warn-only benchmark regression diff (CI perf-drift visibility).
+
+Compares a freshly produced ``BENCH_core.json`` against the committed
+one and prints a GitHub Actions ``::warning::`` annotation for every row
+whose ``us_per_call`` regressed past the threshold — so perf drift shows
+up in PR logs without flaking the build on noisy CI containers (the
+exit code is ALWAYS 0; these numbers gate by eyeball, not by assert).
+
+Rows with ``us_per_call == 0`` are informational (derived-only gates —
+bit-identical flags, byte counts) and are skipped; rows present on only
+one side are listed as added/removed.
+
+Run: python benchmarks/compare.py BENCH_core.json BENCH_fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"::notice::bench-compare: cannot read {path}: {e}")
+        return {}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_core.json")
+    ap.add_argument("fresh", help="freshly produced results json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="relative us_per_call increase that counts as "
+                         "a regression (default 0.25 = +25%%)")
+    args = ap.parse_args(argv)
+    old, new = load(args.baseline), load(args.fresh)
+    if not old or not new:
+        return 0
+
+    regressed = improved = 0
+    for name in sorted(set(old) & set(new)):
+        o = old[name].get("us_per_call", 0) or 0
+        n = new[name].get("us_per_call", 0) or 0
+        if o <= 0 or n <= 0:
+            continue                     # derived-only / gate rows
+        ratio = n / o
+        if ratio > 1 + args.threshold:
+            regressed += 1
+            print(f"::warning title=bench regression::{name}: "
+                  f"{o:.2f}us -> {n:.2f}us (+{(ratio - 1) * 100:.0f}%)")
+        elif ratio < 1 - args.threshold:
+            improved += 1
+            print(f"::notice title=bench improvement::{name}: "
+                  f"{o:.2f}us -> {n:.2f}us ({(ratio - 1) * 100:.0f}%)")
+    for name in sorted(set(new) - set(old)):
+        print(f"::notice::bench row added: {name}")
+    for name in sorted(set(old) - set(new)):
+        print(f"::warning title=bench row removed::{name}")
+    print(f"bench-compare: {regressed} regressed, {improved} improved, "
+          f"{len(set(old) & set(new))} compared "
+          f"(threshold +{args.threshold:.0%}, warn-only)")
+    return 0                             # NEVER fails the build
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -210,6 +210,94 @@ def _mk_compute(handler: Callable, d: int, src_idx: tuple, frees: tuple):
     return thunk
 
 
+@dataclasses.dataclass(frozen=True)
+class BatchAnalysis:
+    """Verdict of the per-program batch-axis analysis (DESIGN.md §9)."""
+    batchable: bool
+    reason: str
+
+
+def batch_analysis(bound: rbl_mod.BoundProgram) -> BatchAnalysis:
+    """Decide whether a program can stage under a leading batch axis.
+
+    The batched path executes the staged linked form under ``jax.vmap``
+    (inputs mapped, weights broadcast), which is only sound for programs
+    whose every op is a pure device computation per sample:
+
+      * COLLECTIVE ops coordinate across a mesh axis — a vmapped replica
+        would silently change the collective's participant set;
+      * GRAPH_EXEC artifacts are opaque host callables compiled for one
+        batch shape (and are not covered by the program CRC the staging
+        cache keys on);
+      * split-phase DMA (any H2D the residency plan hoists into the
+        prefetch prologue, or D2H it sinks into the drain epilogue)
+        carries per-execution host-side ticket state — the host engine
+        moves ONE buffer per descriptor, not a batch-of-N.
+
+    Everything else (compute dispatches, ALLOC/FREE, BIND_CONST, FENCE,
+    POLL, non-split-phase transfers) stages cleanly. The verdict is
+    cached on the BoundProgram; callers get serial fallback, not an
+    error, when it is negative (Executor.run_batched).
+    """
+    cached = getattr(bound, "_batch_analysis", None)
+    if cached is not None:
+        return cached
+
+    def analyze() -> BatchAnalysis:
+        for op in bound.program.ops():
+            if op.op is Op.COLLECTIVE:
+                return BatchAnalysis(False, "COLLECTIVE op (mesh-axis "
+                                     "semantics do not vmap)")
+            if op.op is Op.GRAPH_EXEC:
+                return BatchAnalysis(False, "GRAPH_EXEC artifact (opaque "
+                                     "host callable, fixed batch shape)")
+        plan = plan_residency(bound)
+        if plan.prefetch_syms or plan.drain_syms:
+            syms = (plan.prefetch_syms + plan.drain_syms)[:3]
+            return BatchAnalysis(False, "host split-phase DMA (prefetch/"
+                                 f"drain schedule over {list(syms)})")
+        return BatchAnalysis(True, "batchable")
+
+    verdict = analyze()
+    bound._batch_analysis = verdict
+    return verdict
+
+
+def stage_callable(linked: LinkedProgram):
+    """The staged form of a linked program: ``fn(inputs, weights) -> outs``.
+
+    This is the function ``Executor.fuse`` jits into one XLA program, and
+    the function ``Executor.run_batched`` wraps in ``jax.vmap`` (inputs
+    mapped over a leading batch axis, weights broadcast) before jitting a
+    per-bucket executable. Built from a TRACE-driver link, it performs no
+    device work of its own — everything stays symbolic until XLA runs it.
+    """
+    weight_slots = linked.weight_slots
+    input_slots = linked.input_slots
+    thunks = linked.thunks
+    output_slots = linked.output_slots
+    n_slots = linked.n_slots
+    prologue = linked.prologue
+    epilogue = linked.epilogue
+
+    def staged(inputs: dict, weights: dict) -> dict:
+        slots: list = [None] * n_slots
+        for k, i in weight_slots.items():
+            slots[i] = weights[k]
+        for k, i in input_slots.items():
+            slots[i] = inputs[k]
+        for pre in prologue:
+            pre(slots, None)
+        for thunk in thunks:
+            thunk(slots, None)
+        for epi in epilogue:
+            epi(slots, None)
+        return {name: slots[i] for name, i in output_slots
+                if slots[i] is not None}
+
+    return staged
+
+
 def link(bound: rbl_mod.BoundProgram, driver,
          artifacts: Optional[dict] = None) -> LinkedProgram:
     """Lower a BoundProgram into a LinkedProgram against one driver.

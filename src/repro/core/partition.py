@@ -35,9 +35,11 @@ enforced by tests/test_conformance.py.
 from __future__ import annotations
 
 import bisect
+import collections
 import dataclasses
+import time
 import weakref
-from typing import Any, Optional
+from typing import Any, Iterable, Iterator, Optional
 
 from repro.core import rbl as rbl_mod
 from repro.core import rhal as rhal_mod
@@ -262,7 +264,7 @@ def partition(bound: rbl_mod.BoundProgram,
 
 def execute(part: PartitionedProgram, mesh: TileMesh,
             inputs: Optional[dict] = None, rimfs=None,
-            platform=None) -> dict:
+            platform=None, stage_times: Optional[list] = None) -> dict:
     """Run the partitioned schedule over a tile mesh.
 
     Stage *k* (tile group *k*) redeems its cut-in tickets, executes its
@@ -320,8 +322,13 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
                     # resolved the weights — reuse those buffers
                     weights=None if rimfs is not None else
                     {s: feed[s] for s in tile.weight_syms if s in feed})
+                t0 = time.perf_counter()
                 result = Executor(driver=group.driver).run(
                     bound_t, inputs=stage_in)
+                if stage_times is not None:
+                    # per-stage busy time (occupancy accounting for the
+                    # benchmark's bubble-fraction column)
+                    stage_times.append((gid, time.perf_counter() - t0))
                 break
             except TileFailure:
                 tried.add(gid)
@@ -364,3 +371,168 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
             platform.post("stage_complete",
                           {"stage": stage_idx, "group": gid})
     return outs
+
+
+# ---------------------------------------------------------------------------
+# Streaming pipeline fill (batch of independent inputs over the tile array)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Sample:
+    """One in-flight input's pipeline state."""
+    idx: int
+    feed: dict
+    stage: int = 0
+    tickets: dict = dataclasses.field(
+        default_factory=dict)            # (sym, dst_gid) -> in-flight ticket
+    outs: dict = dataclasses.field(default_factory=dict)
+
+
+def execute_stream(part: PartitionedProgram, mesh: TileMesh,
+                   inputs_iter: Iterable, rimfs=None, depth: int = 4,
+                   fused: bool = True,
+                   stats: Optional[dict] = None) -> Iterator[dict]:
+    """Software-pipeline a STREAM of inputs over the partitioned schedule.
+
+    ``execute`` runs one sample through all stages back-to-back, so with
+    G groups every group idles G-1/G of the time — the negative scaling
+    the partition benchmark's latency-mode rows show. This driver keeps
+    the array full instead: per clock tick every in-flight sample
+    advances exactly one stage, so group *g* runs sample *i* while group
+    *g+1* runs sample *i−1* — the paper's layer-pipelined dataflow
+    shape, AIE4ML-style.
+
+    With ``fused=True`` (default) each tile stage executes as ONE staged
+    XLA dispatch (``Executor.fuse`` of the tile subprogram, cached on the
+    tile's BoundProgram) instead of the per-op linked thunk loop — the
+    per-op dispatch fixed cost is paid once per *stage*, which is what
+    lets the pipelined stream beat the single-device linked loop on a
+    host where tile compute shares cores with dispatch. ``fused=False``
+    keeps the linked path (full driver vtable semantics: arena
+    accounting, per-op stats, fault injection at every op). Both modes
+    are bit-identical to serial execution (tests/test_conformance.py).
+
+    Cut-edge tensors stay split-phase and become **double-buffered**: the
+    ticket group *g* issued for sample *i* this tick coexists with the
+    ticket sample *i−1* redeems at group *g+1* next tick, one in flight
+    per (edge, sample) — never redeemed before the consuming stage
+    starts, so the inter-tile stream always rides under compute.
+
+    ``depth`` bounds in-flight samples (admission is one per tick, so the
+    pipeline fills gradually and never holds more than ``depth`` samples'
+    buffers); ``depth >= part.n_groups`` keeps every group busy at steady
+    state. Outputs yield lazily in submission order — a slow consumer
+    back-pressures admission naturally because the generator only
+    advances between ``next()`` calls.
+
+    ``stats`` (optional dict) is filled with per-group busy seconds
+    (``busy`` — host time inside each stage's dispatch, including any
+    sync the stage performs), tick and sample counts — occupancy =
+    busy/wall is the benchmark's per-stage bubble accounting. Tile
+    failures propagate as ``TileFailure`` (stream mode has no re-queue
+    path: a re-queued middle stage would reorder the stream's cut-edge
+    tickets; callers needing elasticity run ``execute`` per sample under
+    a Platform).
+    """
+    from repro.core.executor import Executor   # local: avoids import cycle
+    if mesh.n_groups < part.n_groups:
+        raise ValueError(f"mesh has {mesh.n_groups} groups, partition "
+                         f"needs {part.n_groups}")
+    if depth < 1:
+        raise ValueError(f"in-flight depth must be >= 1, got {depth}")
+    if stats is None:
+        stats = {}
+    stats.update({"busy": {t.gid: 0.0 for t in part.tiles},
+                  "ticks": 0, "samples": 0, "depth": depth,
+                  "fused": fused})
+    base = part.bound.buffers
+    executors = {t.gid: Executor(driver=mesh.group(t.gid).driver)
+                 for t in part.tiles}
+    # per-stage static schedule (hoisted out of the per-sample hot loop)
+    edges_by_gid = {t.gid: part.edges_from(t.gid) for t in part.tiles}
+    base_weights = None if rimfs is not None else \
+        [{w: base[w] for w in t.weight_syms if w in base}
+         for t in part.tiles]
+    stage_fns = None
+    if fused:
+        # one staged executable + weight feed per stage, resolved before
+        # the first sample is admitted (cached across streams on the
+        # tile's BoundProgram via Executor.fuse)
+        stage_fns = []
+        for idx, tile in enumerate(part.tiles):
+            bt = tile.bind(mesh.group(tile.gid).driver, rimfs,
+                           weights=None if rimfs is not None
+                           else base_weights[idx])
+            fn = executors[tile.gid].fuse(bt)
+            stage_fns.append((fn, executors[tile.gid].weights_from(bt)))
+    busy = stats["busy"]
+    n_stages = len(part.tiles)
+    it = iter(inputs_iter)
+    inflight: collections.deque = collections.deque()
+    next_idx = 0
+    exhausted = False
+    while True:
+        if not exhausted and len(inflight) < depth:
+            try:
+                inputs = next(it)
+            except StopIteration:
+                exhausted = True
+            else:
+                feed = dict(inputs) if inputs else {}
+                for sym in part.bound.missing_inputs:
+                    if sym not in feed and sym not in base:
+                        raise ValueError(f"missing input {sym!r} "
+                                         f"(stream sample {next_idx})")
+                inflight.append(_Sample(next_idx, feed))
+                next_idx += 1
+                stats["samples"] += 1
+        if not inflight:
+            return
+        stats["ticks"] += 1
+        # One clock tick. Every sample consumes only tickets issued in a
+        # PREVIOUS tick, so in-tick order is correctness-free — newest
+        # first is chosen so the synchronizing tail of the pipeline (a
+        # final-stage FENCE, the consumer's D2H materialization) runs
+        # AFTER the younger samples' compute has been dispatched: the
+        # sync then overlaps real work instead of stalling admission.
+        for s in reversed(inflight):
+            tile = part.tiles[s.stage]
+            gid = tile.gid
+            group = mesh.group(gid)
+            feed = s.feed
+            stage_in = {}
+            for sym in tile.input_syms:
+                v = feed.get(sym)
+                if v is None:
+                    v = base.get(sym)
+                if v is not None:
+                    stage_in[sym] = v
+            for sym in tile.cut_ins:
+                t = s.tickets.pop((sym, gid))
+                stage_in[sym] = group.driver.dma_wait(t) \
+                    if type(t) is DmaTicket else t
+            if stage_fns is not None:
+                fn, w = stage_fns[s.stage]
+                t0 = time.perf_counter()
+                result = fn(stage_in, w)
+                busy[gid] += time.perf_counter() - t0
+            else:
+                bound_t = tile.bind(
+                    group.driver, rimfs,
+                    weights=None if rimfs is not None else
+                    base_weights[s.stage])
+                t0 = time.perf_counter()
+                result = executors[gid].run(bound_t, inputs=stage_in)
+                busy[gid] += time.perf_counter() - t0
+            for sym in tile.output_syms:
+                if sym in result:
+                    s.outs[sym] = result[sym]
+            for edge in edges_by_gid[gid]:
+                buf = result.get(edge.sym)
+                if buf is not None:
+                    s.tickets[(edge.sym, edge.dst)] = mesh.stream(
+                        edge.sym, buf, gid, edge.dst)
+            s.stage += 1
+        while inflight and inflight[0].stage >= n_stages:
+            done = inflight.popleft()
+            yield done.outs

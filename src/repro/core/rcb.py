@@ -496,6 +496,24 @@ class RCBProgram:
     blocks: list            # list[RCB]
     artifacts: dict = dataclasses.field(default_factory=dict)
 
+    def crc(self) -> int:
+        """Whole-program CRC-32 over the canonical v2 encoding, lazily
+        computed and cached — the identity key for compile caches (two
+        programs with the same CRC stage to the same executable, so e.g.
+        the batch-bucket cache in core/executor.py is shared across
+        re-binds of the same program). Artifacts are not covered (they are
+        not serialized), but artifact-bearing programs are excluded from
+        batch staging by ``linker.batch_analysis`` anyway."""
+        c = getattr(self, "_crc", None)
+        if c is None:
+            # the v2 encoding already ends with the whole-program CRC —
+            # reuse it rather than re-hashing (and NEVER hash the full
+            # encoding including its trailer: crc32(body || crc32(body))
+            # is the same constant for every message)
+            (c,) = struct.unpack("<I", self.encode()[-4:])
+            self._crc = c
+        return c
+
     # ------------------------------------------------------------- binary io
     def encode(self, version: int = PROG_VERSION) -> bytes:
         """Serialize.  v2 (default): interned symtab + packed op records.

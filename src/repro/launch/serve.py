@@ -31,12 +31,12 @@ from repro.serving.server import Client, InferenceServer
 
 
 def serve_resnet(requests: int, batch: int, clients: int,
-                 pipeline: int) -> None:
+                 pipeline: int, batch_window: int = 8) -> None:
     cfg = RESNET.smoke()
     params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
     prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params),
                                         batch=batch)
-    server = InferenceServer()
+    server = InferenceServer(batch_window=batch_window)
     addr = server.start()
     print(f"[serve] listening on {addr}")
     try:
@@ -86,6 +86,8 @@ def serve_resnet(requests: int, batch: int, clients: int,
               f"p99={tel.get('p99', 0)*1e3:.2f}ms; "
               f"dispatcher processed={srv.get('processed')} "
               f"rejected={srv.get('rejected')} shed={srv.get('shed')} "
+              f"batched={srv.get('batched', {}).get('requests', 0)}reqs/"
+              f"{srv.get('batched', {}).get('dispatches', 0)}dispatches "
               f"queue_wait_p95="
               f"{srv.get('queue_wait', {}).get('p95', 0)*1e3:.2f}ms")
         c0.close()
@@ -124,12 +126,15 @@ def main() -> None:
                     help="concurrent client connections")
     ap.add_argument("--pipeline", type=int, default=4,
                     help="in-flight pipelined requests per connection")
+    ap.add_argument("--batch-window", type=int, default=8,
+                    help="dispatcher coalescing window (1 disables)")
     ap.add_argument("--lm", action="store_true")
     args = ap.parse_args()
     if args.lm:
         serve_lm(args.requests)
     else:
-        serve_resnet(args.requests, args.batch, args.clients, args.pipeline)
+        serve_resnet(args.requests, args.batch, args.clients,
+                     args.pipeline, batch_window=args.batch_window)
 
 
 if __name__ == "__main__":

@@ -148,26 +148,46 @@ class ServingEngine:
 
     def _admit(self) -> None:
         free = [i for i in range(self.max_batch) if self._slots[i] is None]
-        for i, req in zip(free, self._pop_admitted(len(free))):
-            self._slots[i] = req
-            # per-slot prefill (batch=1 prompt padded into the slot)
-            prompt = jnp.asarray(req.prompt)[None, :]
+        placed = list(zip(free, self._pop_admitted(len(free))))
+        if not placed:
+            return
+        # Batched prefill: requests admitted together prefill as ONE
+        # fused dispatch per (prompt length, chunk) instead of one
+        # dispatch per request — the last per-request call in the
+        # serving hot path. Same-shape grouping keeps per-sample
+        # numerics bit-identical to the single-prompt prefill (batching
+        # a matmul/attention over a leading axis does not reorder any
+        # per-sample reduction); power-of-two chunking bounds the jit
+        # trace cache at O(#lengths x log2(max_batch)) batch shapes
+        # instead of one trace per (length, arrival count) pair.
+        by_len: dict = {}
+        for i, req in placed:
+            by_len.setdefault(req.prompt.shape[0], []).append((i, req))
+        groups = []
+        for plen, members in by_len.items():
+            while members:
+                k = 1 << (len(members).bit_length() - 1)   # pow2 <= len
+                groups.append((plen, members[:k]))
+                members = members[k:]
+        for plen, group in groups:
+            prompts = jnp.stack([jnp.asarray(r.prompt) for _, r in group])
             logits, cache = self._prefill(self.params,
-                                          {"inputs": prompt})
-            # splice the prompt's KV into this slot of the shared cache
-            plen = req.prompt.shape[0]
-            for key in self._cache:
-                c = self._cache[key]
-                src = cache[key].astype(c.dtype)
-                if key in ("k", "v"):
-                    self._cache[key] = jax.lax.dynamic_update_slice(
-                        c, src, (0, i, 0, 0, 0))
-                else:                        # recurrent states (L,B,...)
-                    self._cache[key] = jax.lax.dynamic_update_slice(
-                        c, src, (0, i) + (0,) * (c.ndim - 2))
-            self._pos[i] = plen
-            tok = int(jnp.argmax(logits[0]))
-            req.out_tokens.append(tok)
+                                          {"inputs": prompts})
+            for j, (i, req) in enumerate(group):
+                self._slots[i] = req
+                # splice this prompt's KV into slot i of the shared cache
+                for key in self._cache:
+                    c = self._cache[key]
+                    src = cache[key][:, j:j + 1].astype(c.dtype)
+                    if key in ("k", "v"):
+                        self._cache[key] = jax.lax.dynamic_update_slice(
+                            c, src, (0, i, 0, 0, 0))
+                    else:                    # recurrent states (L,B,...)
+                        self._cache[key] = jax.lax.dynamic_update_slice(
+                            c, src, (0, i) + (0,) * (c.ndim - 2))
+                self._pos[i] = plen
+                tok = int(jnp.argmax(logits[j]))
+                req.out_tokens.append(tok)
 
     def step(self) -> int:
         """One decode step across all live slots. Returns #live."""

@@ -41,6 +41,7 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.core import linker as linker_mod
 from repro.core.executor import Executor
 from repro.core.rtpm import Platform, ServiceLoop
 from repro.serving import protocol as proto
@@ -120,7 +121,7 @@ class InferenceServer:
                  artifacts: Optional[dict] = None, engine=None, mesh=None,
                  scheduler: Optional[DeadlineScheduler] = None,
                  max_queue: int = 128, max_frame: int = proto.MAX_FRAME,
-                 send_timeout: float = 30.0):
+                 send_timeout: float = 30.0, batch_window: int = 8):
         self.platform = Platform()
         self.executor = Executor(rtpm=self.platform)
         self.artifacts = artifacts or {}
@@ -135,6 +136,14 @@ class InferenceServer:
         self.max_frame = max_frame
         self.max_queue = max_queue
         self.send_timeout = send_timeout
+        # Dispatcher request coalescing (DESIGN.md §9): up to this many
+        # compatible backlogged plain-RCB requests dispatch as ONE
+        # batched execution. 1 disables coalescing. The window never
+        # delays a solo request — it only widens over work that is
+        # ALREADY queued when the EDF head is popped.
+        self.batch_window = max(1, int(batch_window))
+        self.batched_stats = {"dispatches": 0, "requests": 0,
+                              "max_batch": 0}
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -332,13 +341,41 @@ class InferenceServer:
             route.send(proto.Msg.ERROR, proto.pack_json({"error": str(e)}),
                        rid=rid, version=ver)
 
+    def _coalescible(self) -> bool:
+        """True when backlogged plain-RCB requests may batch: coalescing
+        is a plain linked-path feature (the partitioned path pipelines
+        one sample per stage), and the bound program must pass the batch
+        analysis — otherwise batched dispatch would just serialize
+        inside run_batched and inflate queue wait for nothing."""
+        return (self.batch_window > 1 and self.mesh is None
+                and self._bound is not None
+                and linker_mod.batch_analysis(self._bound).batchable)
+
+    @staticmethod
+    def _tensor_sig(tensors: dict) -> tuple:
+        """Shape/dtype signature two requests must share to ride one
+        batched dispatch (they stack on a new leading axis)."""
+        return tuple(sorted((k, np.shape(v), str(np.asarray(v).dtype))
+                            for k, v in tensors.items()))
+
     def _drain_plain(self) -> bool:
         """Drain the plain-RCB admission queue in priority/EDF order:
         shed infeasible requests with their verdicts, execute the rest
-        through the linked (or partitioned) executor path."""
+        through the linked (or partitioned) executor path.
+
+        Coalescing: EDF picks the head as before; when the program is
+        batchable, a bounded batch window then gathers up to
+        ``batch_window - 1`` more requests that are ALREADY in the
+        backlog (``admit`` pops only queued work — a solo request is
+        never delayed waiting for company). Same-signature runs dispatch
+        as one batched execution (replies scatter back by request id);
+        signature changes split the window, preserving admission order.
+        """
         progressed = False
         while True:
             admitted = self.scheduler.admit(1)
+            if admitted and self._coalescible():
+                admitted += self.scheduler.admit(self.batch_window - 1)
             for s in self.scheduler.drain_shed():
                 r, srid, sver, _ = s.payload
                 r.send(proto.Msg.ERROR,
@@ -348,22 +385,81 @@ class InferenceServer:
                 progressed = True
             if not admitted:
                 return progressed
+            # split the admitted window into maximal same-signature runs
+            # (EDF order preserved across runs)
+            runs: list = []
             for s in admitted:
-                r, srid, sver, sts = s.payload
-                t0 = time.perf_counter()
-                try:
-                    out = self._infer(sts)
-                except Exception as e:          # report, keep draining
-                    r.send(proto.Msg.ERROR,
-                           proto.pack_json({"error": str(e)}),
-                           rid=srid, version=sver)
+                sig = self._tensor_sig(s.payload[3])
+                if runs and runs[-1][0] == sig:
+                    runs[-1][1].append(s)
                 else:
-                    dt = time.perf_counter() - t0
-                    self.platform.telemetry.record_latency(dt)
-                    self.scheduler.observe_step_latency(dt)
-                    r.send(proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
-                           rid=srid, version=sver)
+                    runs.append((sig, [s]))
+            for _, run in runs:
+                if len(run) == 1:
+                    self._dispatch_single(run[0])
+                else:
+                    self._dispatch_batch(run)
                 progressed = True
+
+    def _dispatch_single(self, s) -> None:
+        r, srid, sver, sts = s.payload
+        t0 = time.perf_counter()
+        try:
+            out = self._infer(sts)
+        except Exception as e:                  # report, keep draining
+            r.send(proto.Msg.ERROR,
+                   proto.pack_json({"error": str(e)}),
+                   rid=srid, version=sver)
+        else:
+            dt = time.perf_counter() - t0
+            self.platform.telemetry.record_latency(dt)
+            self.scheduler.observe_step_latency(dt)
+            r.send(proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
+                   rid=srid, version=sver)
+
+    def _dispatch_batch(self, run: list) -> None:
+        """One coalesced dispatch for a same-signature request run.
+
+        The whole run executes through ``Executor.run_batched`` (staged
+        once per batch bucket); replies scatter back by request id, and
+        the scheduler EWMA is fed the per-request AMORTIZED latency —
+        feeding it the whole batch's wall time would make the admission
+        policy believe a step costs batch_size times what a request
+        actually experiences, and shed feasible work."""
+        if self._bound is None:
+            for s in run:                       # mirror _infer's refusal
+                r, srid, sver, _ = s.payload
+                r.send(proto.Msg.ERROR,
+                       proto.pack_json({"error": "not provisioned"}),
+                       rid=srid, version=sver)
+            return
+        t0 = time.perf_counter()
+        try:
+            outs = self.executor.run_batched(
+                self._bound, [s.payload[3] for s in run],
+                rimfs=self.platform.rimfs)
+            outs = [{k: np.asarray(v) for k, v in out.items()}
+                    for out in outs]
+        except Exception:
+            # fault isolation: a failed batched dispatch (e.g. the wider
+            # batch shape fails to stage) must not take down requests
+            # that the batch-1 path can still serve — retry each member
+            # serially, which reports its own per-request error if the
+            # failure is really the request's
+            for s in run:
+                self._dispatch_single(s)
+            return
+        amortized = (time.perf_counter() - t0) / len(run)
+        st = self.batched_stats
+        st["dispatches"] += 1
+        st["requests"] += len(run)
+        st["max_batch"] = max(st["max_batch"], len(run))
+        for s, out in zip(run, outs):
+            r, srid, sver, _ = s.payload
+            self.platform.telemetry.record_latency(amortized)
+            self.scheduler.observe_step_latency(amortized)
+            r.send(proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
+                   rid=srid, version=sver)
 
     def _infer_lm(self, work: _Work) -> None:
         """LM service program: continuous batching via the engine; the
@@ -451,7 +547,8 @@ class InferenceServer:
         if self.engine is not None and self.engine.scheduler is not None:
             shed += self.engine.scheduler.shed_count
         s["serving"] = {**self._loop.summary(), "shed": shed,
-                        "inflight": len(self._inflight)}
+                        "inflight": len(self._inflight),
+                        "batched": dict(self.batched_stats)}
         if self.engine is not None:
             s["engine"] = self.engine.telemetry.summary(warmup=1)
         return s

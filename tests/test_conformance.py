@@ -248,6 +248,253 @@ def test_partition_is_deterministic():
 
 
 # ---------------------------------------------------------------------------
+# Batched execution (run_batched): the batch axis must be invisible
+# ---------------------------------------------------------------------------
+
+BATCH_NS = (1, 3, 4, 6, 11)       # covers exact buckets AND pad-to-bucket
+
+
+def _rand_inputs_like(inputs: dict, rng) -> dict:
+    return {k: rng.randn(*np.asarray(v).shape).astype(
+        np.asarray(v).dtype) for k, v in inputs.items()}
+
+
+@pytest.mark.parametrize("n", BATCH_NS)
+@pytest.mark.parametrize("name", ["conv_relu_softmax", "gemm_chain"])
+def test_batched_matches_serial(name, n):
+    """run_batched over N random inputs == N serial run / run_interpreted
+    calls, bit for bit — including N that are not bucket sizes (the
+    pad-to-bucket + slice-back path)."""
+    from repro.core import linker
+    name, prog, files, inputs = next(c for c in _cases() if c[0] == name)
+    rng = np.random.RandomState(100 + n)
+    batch = [_rand_inputs_like(inputs, rng) for _ in range(n)]
+    fs = rimfs.mount(rimfs.pack(files)) if files else None
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)
+    assert linker.batch_analysis(bound).batchable
+    outs = ex.run_batched(bound, batch)
+    assert ex.batch_stats["batchable"] and len(outs) == n
+    assert sum(ex.batch_stats["buckets"]) - ex.batch_stats["padded"] == n
+    for req, got in zip(batch, outs):
+        ref = ex.run_interpreted(rbl.bind(prog, rimfs=fs,
+                                          inputs=dict(req)))
+        _assert_same({k: _np(v) for k, v in ref.items()}, got,
+                     f"{name}/batched@{n} vs interpreted")
+        ref2 = ex.run(bound, inputs=dict(req), rimfs=fs)
+        _assert_same({k: _np(v) for k, v in ref2.items()}, got,
+                     f"{name}/batched@{n} vs linked")
+
+
+@pytest.mark.parametrize("n", (1, 5, 8))
+def test_batched_resnet18_matches_serial(n):
+    """The paper's case study through the batch-axis path (the benchmark
+    gate's correctness side)."""
+    from repro.models import resnet as rn
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params), batch=1)
+    fs = rimfs.mount(image)
+    rng = np.random.RandomState(n)
+    batch = [{"input": rng.rand(1, cfg.image_size, cfg.image_size, 3)
+              .astype(np.float32)} for _ in range(n)]
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)
+    outs = ex.run_batched(bound, batch)
+    assert ex.batch_stats["batchable"]
+    for req, got in zip(batch, outs):
+        ref = {k: _np(v) for k, v in ex.run(bound, inputs=req).items()}
+        _assert_same(ref, got, f"resnet/batched@{n}")
+
+
+@pytest.mark.parametrize("name", ["matmul_dma", "dma_pipeline",
+                                  "transfer_stream", "quant_mix"])
+def test_non_batchable_split_phase_dma_falls_back(name):
+    """Programs with host-split-phase DMA (prefetch/drain schedules) must
+    NOT stage under vmap — run_batched falls back to serial linked
+    execution with identical results, and reports why."""
+    from repro.core import linker
+    name, prog, files, inputs = next(c for c in _cases() if c[0] == name)
+    rng = np.random.RandomState(7)
+    batch = [_rand_inputs_like(inputs, rng) for _ in range(3)]
+    fs = rimfs.mount(rimfs.pack(files)) if files else None
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)
+    verdict = linker.batch_analysis(bound)
+    assert not verdict.batchable and "DMA" in verdict.reason
+    outs = ex.run_batched(bound, batch, rimfs=fs)
+    assert not ex.batch_stats["batchable"]
+    assert ex.batch_stats["buckets"] == []       # nothing staged
+    for req, got in zip(batch, outs):
+        ref = ex.run_interpreted(rbl.bind(prog, rimfs=fs,
+                                          inputs=dict(req)), rimfs=fs)
+        _assert_same({k: _np(v) for k, v in ref.items()}, got,
+                     f"{name}/fallback")
+
+
+def test_non_batchable_graph_exec_falls_back():
+    """GRAPH_EXEC artifacts are opaque host callables — the analysis must
+    reject them and the fallback must still run them correctly."""
+    from repro.core import linker
+    from repro.core.rcb import RCBOp
+    t = {
+        "x": TensorDesc("x", (4, 4), "float32", "input"),
+        "y": TensorDesc("y", (4, 4), "float32", "scratch"),
+        "output": TensorDesc("output", (4, 4), "float32", "output"),
+    }
+    prog = RCBProgram("ge", t, [RCB(0, "layer", (), (
+        RCBOp(Op.GRAPH_EXEC, ("y",), ("x",), {"artifact": "double"}),
+        RCBOp(Op.RELU, ("output",), ("y",)),
+    ))], {"double": lambda x: x * 2.0})
+    prog.validate()
+    rng = np.random.RandomState(0)
+    batch = [{"x": rng.randn(4, 4).astype(np.float32)} for _ in range(3)]
+    ex = Executor()
+    bound = rbl.bind(prog)
+    verdict = linker.batch_analysis(bound)
+    assert not verdict.batchable and "GRAPH_EXEC" in verdict.reason
+    outs = ex.run_batched(bound, batch)
+    assert not ex.batch_stats["batchable"]
+    for req, got in zip(batch, outs):
+        np.testing.assert_array_equal(
+            np.maximum(req["x"] * 2.0, 0), _np(got["output"]))
+
+
+def test_batched_callable_cache_shared_across_binds():
+    """The bucket cache is keyed (program CRC, bucket): a re-bind of the
+    same program must reuse the staged executable, not re-trace."""
+    prog = rctc.compile_gemm_chain(3, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(3, 8)))
+    ex = Executor()
+    b1, b2 = rbl.bind(prog, rimfs=fs), rbl.bind(prog, rimfs=fs)
+    f1 = ex._batched_callable(b1, 4)
+    f2 = Executor()._batched_callable(b2, 4)     # fresh executor too
+    assert f1 is f2
+    assert ex._batched_callable(b1, 2) is not f1  # per-bucket staging
+
+
+def test_fuse_cached_on_bound_program():
+    """Satellite: fuse() must return the SAME jitted callable for
+    repeated calls (keyed by donate_weights) instead of re-linking and
+    re-tracing per call."""
+    prog = rctc.compile_gemm_chain(3, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(3, 8)))
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)
+    f1 = ex.fuse(bound)
+    assert ex.fuse(bound) is f1
+    assert Executor().fuse(bound) is f1          # cache rides the bound
+    fd = ex.fuse(bound, donate_weights=True)
+    assert fd is not f1 and ex.fuse(bound, donate_weights=True) is fd
+    x = np.random.RandomState(0).randn(8, 8).astype(np.float32)
+    ref = {k: _np(v) for k, v in ex.run(
+        rbl.bind(prog, rimfs=fs, inputs={"input": x})).items()}
+    _assert_same(ref, f1({"input": x}, ex.weights_from(bound)),
+                 "fuse-cache")
+
+
+# ---------------------------------------------------------------------------
+# Streaming pipeline fill (execute_stream)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", (True, False))
+@pytest.mark.parametrize("n_groups", (1, 2, 4))
+def test_stream_matches_serial_in_order(n_groups, fused):
+    """execute_stream over M inputs yields, in submission order, outputs
+    bit-identical to M serial executions — at every group count, in both
+    fused-stage and linked-stage mode, including M smaller than the
+    pipeline depth."""
+    from repro.core import partition as partition_mod
+    prog = rctc.compile_gemm_chain(5, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(5, 8)))
+    rng = np.random.RandomState(2)
+    xs = [{"input": rng.randn(8, 8).astype(np.float32)}
+          for _ in range(7)]
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)
+    refs = [{k: _np(v) for k, v in ex.run(bound, inputs=x).items()}
+            for x in xs]
+    mesh = rhal.TileMesh(n_groups)
+    part = partition_mod.partition(bound, n_groups)
+    for depth in (1, 4):
+        got = list(partition_mod.execute_stream(
+            part, mesh, iter(xs), rimfs=fs, depth=depth, fused=fused))
+        assert len(got) == len(xs)
+        for i, (ref, out) in enumerate(zip(refs, got)):
+            _assert_same(ref, out,
+                         f"stream@{n_groups}/depth{depth}/sample{i}")
+
+
+def test_stream_resnet18_matches_serial():
+    from repro.core import partition as partition_mod
+    from repro.models import resnet as rn
+    cfg = __import__("repro.configs.resnet18",
+                     fromlist=["CONFIG"]).CONFIG.smoke()
+    params = rn.init_resnet(jax.random.PRNGKey(0), cfg)
+    prog, image = rctc.compile_resnet18(cfg, rn.fold_bn(params), batch=1)
+    fs = rimfs.mount(image)
+    rng = np.random.RandomState(5)
+    xs = [{"input": rng.rand(1, cfg.image_size, cfg.image_size, 3)
+           .astype(np.float32)} for _ in range(6)]
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)
+    refs = [{k: _np(v) for k, v in ex.run(bound, inputs=x).items()}
+            for x in xs]
+    mesh = rhal.TileMesh(2)
+    part = partition_mod.partition(bound, 2)
+    stats: dict = {}
+    got = list(partition_mod.execute_stream(part, mesh, iter(xs),
+                                            rimfs=fs, depth=4,
+                                            stats=stats))
+    for i, (ref, out) in enumerate(zip(refs, got)):
+        _assert_same(ref, out, f"resnet-stream/sample{i}")
+    assert stats["samples"] == len(xs)
+    assert all(b >= 0 for b in stats["busy"].values())
+
+
+def test_stream_without_rimfs_reuses_bound_weights():
+    """Stream mode must work from a weights-resolved bind with no image
+    round-trip, like execute()."""
+    from repro.core import partition as partition_mod
+    prog = rctc.compile_gemm_chain(4, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(4, 8)))
+    rng = np.random.RandomState(3)
+    xs = [{"input": rng.randn(8, 8).astype(np.float32)} for _ in range(4)]
+    ex = Executor()
+    bound = rbl.bind(prog, rimfs=fs)      # weights resolved HERE
+    refs = [{k: _np(v) for k, v in ex.run(bound, inputs=x).items()}
+            for x in xs]
+    part = partition_mod.partition(bound, 2)
+    got = list(partition_mod.execute_stream(part, rhal.TileMesh(2),
+                                            iter(xs)))   # no rimfs=
+    for ref, out in zip(refs, got):
+        _assert_same(ref, out, "stream/no-rimfs")
+
+
+def test_stream_propagates_tile_failure():
+    """No silent drops: a dead group surfaces as TileFailure (stream mode
+    documents no-requeue; elasticity stays with execute())."""
+    from repro.core import partition as partition_mod
+    from repro.core.rhal import TileFailure
+    prog = rctc.compile_gemm_chain(4, 8)
+    fs = rimfs.mount(rimfs.pack(rctc.gemm_chain_weights(4, 8)))
+    xs = [{"input": np.random.RandomState(1).randn(8, 8)
+           .astype(np.float32)} for _ in range(4)]
+    bound = rbl.bind(prog, rimfs=fs)
+    mesh = rhal.TileMesh(2)
+    part = partition_mod.partition(bound, 2)
+    list(partition_mod.execute_stream(part, mesh, iter(xs[:1]),
+                                      rimfs=fs))         # healthy warm-up
+    mesh.kill(1)
+    with pytest.raises(TileFailure):
+        # fused stages bypass per-op vtable dispatch, but the cut-edge
+        # stream into the dead consumer group still touches its driver
+        list(partition_mod.execute_stream(part, mesh, iter(xs),
+                                          rimfs=fs))
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis-generated programs (optional dependency, like the other suites)
 # ---------------------------------------------------------------------------
 

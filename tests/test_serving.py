@@ -102,6 +102,37 @@ def test_network_service_end_to_end(rng):
         server.stop()
 
 
+def test_batched_prefill_matches_sequential_admission(rng):
+    """Regression for the grouped-prefill admission path: prompts that
+    prefill together as one (k, S) dispatch must produce the SAME tokens
+    as the same prompts admitted one at a time (batch-1 prefill each) —
+    otherwise engine output becomes admission-timing-dependent."""
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    prompts = [rng.randint(0, cfg.vocab_size, (6,)).astype(np.int32)
+               for _ in range(3)]
+
+    # grouped: all three admitted in one _admit -> one (3, 6) prefill
+    eng_b = ServingEngine(cfg, params, max_batch=3, max_seq=64)
+    batched = [Request(rid=i, prompt=p, max_new=4)
+               for i, p in enumerate(prompts)]
+    for r in batched:
+        eng_b.submit(r)
+    eng_b.run_until_drained()
+
+    # sequential: one slot -> every prefill is batch-1
+    eng_s = ServingEngine(cfg, params, max_batch=1, max_seq=64)
+    serial = []
+    for i, p in enumerate(prompts):
+        r = Request(rid=i, prompt=p, max_new=4)
+        eng_s.submit(r)
+        eng_s.run_until_drained()
+        serial.append(r)
+
+    for rb, rs in zip(batched, serial):
+        assert rb.out_tokens == rs.out_tokens
+
+
 def test_lm_engine_batched_requests(rng):
     cfg = get_config("qwen2-1.5b-smoke")
     params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))

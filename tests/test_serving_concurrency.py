@@ -360,9 +360,12 @@ def test_backpressure_busy_replies(resnet_setup):
 
 def test_priority_reorders_backlogged_requests(resnet_setup):
     """With the dispatcher backlogged, a later high-priority request is
-    admitted (and executed) before an earlier low-priority one."""
+    admitted (and executed) before an earlier low-priority one.
+    ``batch_window=1`` disables coalescing so the two requests provably
+    execute as separate dispatches in EDF order (with the window open
+    they would legally ride one batched dispatch instead)."""
     cfg, prog, image = resnet_setup
-    server, addr, client = _start(prog, image, max_queue=8)
+    server, addr, client = _start(prog, image, max_queue=8, batch_window=1)
     try:
         order = []
         inner_infer = server._infer
@@ -388,6 +391,64 @@ def test_priority_reorders_backlogged_requests(resnet_setup):
         client.result(rid_low)
         client.result(rid_high)
         assert order == [2.0, 1.0]              # high priority ran first
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_backlog_coalesces_into_batched_dispatch(resnet_setup):
+    """A backlog of same-program, same-shape INFERs rides ONE batched
+    dispatch (Executor.run_batched), with replies scattered back by
+    request id and bit-identical to serial execution. A solo request
+    must NOT count as a batched dispatch (the window never waits)."""
+    cfg, prog, image = resnet_setup
+    server, addr, client = _start(prog, image, max_queue=32)
+    try:
+        xs = [_input(cfg, 40 + i) for i in range(6)]
+        refs = [client.infer(input=x)["output"] for x in xs]
+        assert server.batched_stats["dispatches"] == 0   # solos stay solo
+
+        gate, started = _gate_dispatcher(server)
+        rids = [client.infer_async(input=x) for x in xs]
+        assert started.wait(10)
+        deadline = time.monotonic() + 10
+        while server.scheduler.pending() < len(xs) - 1 and \
+                time.monotonic() < deadline:
+            time.sleep(0.005)
+        gate.set()
+        outs = [client.result(rid)["output"] for rid in rids]
+        for out, ref in zip(outs, refs):
+            np.testing.assert_array_equal(out, ref)
+        st = server.batched_stats
+        assert st["dispatches"] >= 1 and st["requests"] >= 2
+        assert st["max_batch"] <= server.batch_window
+        tel = client.telemetry()["serving"]["batched"]
+        assert tel["dispatches"] == st["dispatches"]
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_coalescing_disabled_over_tile_mesh(resnet_setup):
+    """The partitioned path pipelines one sample per stage — a mesh-
+    attached server must keep dispatching per-request (and still be
+    bit-identical)."""
+    from repro.core import rhal
+
+    cfg, prog, image = resnet_setup
+    server, addr, client = _start(prog, image, mesh=rhal.TileMesh(2),
+                                  max_queue=32)
+    try:
+        xs = [_input(cfg, 60 + i) for i in range(3)]
+        refs = [client.infer(input=x)["output"] for x in xs]
+        gate, started = _gate_dispatcher(server)
+        rids = [client.infer_async(input=x) for x in xs]
+        assert started.wait(10)
+        gate.set()
+        for rid, ref in zip(rids, refs):
+            np.testing.assert_array_equal(client.result(rid)["output"],
+                                          ref)
+        assert server.batched_stats["dispatches"] == 0
     finally:
         client.close()
         server.stop()
