@@ -16,7 +16,43 @@ from __future__ import annotations
 
 import argparse
 import json
+import re
 import sys
+
+
+def check_fleet_gates(new: dict) -> int:
+    """Warn-only robustness gates over the fleet/* rows: zero failed
+    requests, bit-identical responses, p99 under its bound, swaps landing
+    on the right side (committed / rolled_back). Returns the number of
+    warnings emitted — informational, never fails the build."""
+    warned = 0
+
+    def warn(name: str, msg: str) -> None:
+        nonlocal warned
+        warned += 1
+        print(f"::warning title=fleet gate::{name}: {msg}")
+
+    d = new.get("fleet/scale_cycle", {}).get("derived", "")
+    if d:
+        m = re.search(r"failed_requests=(\d+)", d)
+        if m and int(m.group(1)) != 0:
+            warn("fleet/scale_cycle", f"{m.group(1)} failed requests "
+                 f"(gate: 0)")
+        m = re.search(r"p99=([\d.]+)ms", d)
+        b = re.search(r"p99_bound=([\d.]+)ms", d)
+        if m and b and float(m.group(1)) > float(b.group(1)):
+            warn("fleet/scale_cycle", f"p99 {m.group(1)}ms past bound "
+                 f"{b.group(1)}ms")
+        if "bit_identical=False" in d:
+            warn("fleet/scale_cycle", "responses not bit-identical")
+    d = new.get("fleet/weight_swap", {}).get("derived", "")
+    if d and "result=committed" not in d:
+        warn("fleet/weight_swap", "hot swap did not commit")
+    d = new.get("fleet/bad_swap_rollback", {}).get("derived", "")
+    if d and "result=rolled_back" not in d:
+        warn("fleet/bad_swap_rollback",
+             "bad-weight swap was not rolled back")
+    return warned
 
 
 def load(path: str) -> dict:
@@ -39,6 +75,7 @@ def main(argv=None) -> int:
     old, new = load(args.baseline), load(args.fresh)
     if not old or not new:
         return 0
+    fleet_warnings = check_fleet_gates(new)
 
     regressed = improved = 0
     for name in sorted(set(old) & set(new)):
@@ -60,7 +97,8 @@ def main(argv=None) -> int:
     for name in sorted(set(old) - set(new)):
         print(f"::warning title=bench row removed::{name}")
     print(f"bench-compare: {regressed} regressed, {improved} improved, "
-          f"{len(set(old) & set(new))} compared "
+          f"{len(set(old) & set(new))} compared, "
+          f"{fleet_warnings} fleet-gate warnings "
           f"(threshold +{args.threshold:.0%}, warn-only)")
     return 0                             # NEVER fails the build
 

@@ -858,6 +858,53 @@ def core_dispatch_bench(rng=None, iters: int = 30) -> None:
          f"(target >= 3x)")
 
 
+# ---------------------------------------------------------------------------
+# Fleet operations: scale cycle + hot swap + kill/heal under live traffic
+# ---------------------------------------------------------------------------
+
+def fleet_operations_bench(quick: bool = False) -> None:
+    """One seeded chaos scenario (tests/chaos.py): a 2 -> peak -> 2 scale
+    cycle, a hot weight swap, a forced bad swap and a tile-group kill all
+    land mid-traffic; the rows carry the robustness gate — zero failed
+    requests, bit-identical responses, bounded p99."""
+    import importlib.util
+    import pathlib
+    path = pathlib.Path(__file__).resolve().parent.parent / "tests" / \
+        "chaos.py"
+    spec = importlib.util.spec_from_file_location("chaos_bench", path)
+    chaos = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(chaos)
+
+    p99_bound_s = 30.0
+    if quick:
+        rep = chaos.run_chaos(groups=2, seed=7, requests=30, clients=2,
+                              scale_peak=4, pace_s=0.01, dma_delay_s=0.1,
+                              p99_bound_s=p99_bound_s)
+    else:
+        rep = chaos.run_chaos(groups=2, seed=7, requests=90, clients=3,
+                              scale_peak=8, p99_bound_s=p99_bound_s)
+    violations = chaos.check_report(rep)
+    bit_identical = rep["mismatches"] == 0 and rep["ok"] == rep["sent"]
+    tm = rep["timings"]
+    emit("fleet/scale_cycle", rep["p50_s"] * 1e6,
+         f"failed_requests={rep['failed']} "
+         f"p99={rep['p99_s'] * 1e3:.1f}ms "
+         f"p99_bound={rep['p99_bound_s'] * 1e3:.0f}ms "
+         f"bit_identical={bit_identical} "
+         f"up={tm['scale_up'] * 1e3:.1f}ms "
+         f"down={tm['scale_down'] * 1e3:.1f}ms "
+         f"violations={len(violations)}")
+    emit("fleet/weight_swap", tm["swap_good"] * 1e6,
+         f"result={rep['good_swap']} (probe + atomic flip, "
+         f"zero dropped requests)")
+    emit("fleet/chaos_kill", tm["kill_to_heal"] * 1e6,
+         f"kill->heal_complete under traffic; "
+         f"final_groups={rep['n_groups_final']}")
+    emit("fleet/bad_swap_rollback", tm["swap_bad"] * 1e6,
+         f"result={rep['bad_swap']} (conformance probe caught the "
+         f"wrong weights; old binding kept serving)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -889,6 +936,7 @@ def main() -> None:
     table2_resource_utilization()
     table3_resnet_inference(iters=50 if quick else 200)
     serving_concurrency_bench(per_client=3 if quick else 6)
+    fleet_operations_bench(quick=quick)
     kernel_microbench()
     with open(args.json, "w") as f:
         json.dump(RESULTS, f, indent=2, sort_keys=True)

@@ -463,13 +463,7 @@ class Executor:
         from repro.core import partition as partition_mod
         if mesh is None:
             mesh = rhal_mod.TileMesh(n_groups)
-        cache = getattr(bound, "_partitions", None)
-        if cache is None:
-            cache = bound._partitions = {}
-        part = cache.get(mesh.n_groups)
-        if part is None:
-            part = cache[mesh.n_groups] = partition_mod.partition(
-                bound, mesh.n_groups)
+        part = partition_mod.ensure_partition(bound, mesh.n_groups)
         return partition_mod.execute(part, mesh, inputs=inputs,
                                      rimfs=rimfs, platform=platform)
 

@@ -1,0 +1,517 @@
+"""Elastic fleet operations — RTPM as the serving control plane.
+
+PRs 3-5 built the recovery primitives in isolation: heartbeat fault
+verdicts (rtpm), stage re-queue on tile failure (partition.execute),
+graceful drain with explicit hand-back (ServiceLoop/server), per-group-
+count partition caching (executor) and zero-byte RIMFS re-binds
+(residency). This module composes them into one self-healing controller
+(DESIGN.md §10):
+
+  * ``FleetController.tick`` runs the observe -> decide -> act loop:
+    dispatcher queue depth + admission backlog, deadline-miss (shed)
+    rate, and heartbeat verdicts (including the per-worker EWMA
+    straggler signal) feed a hysteresis scaler that walks the mesh
+    ladder (2 -> 4 -> 8 -> 2) and a healer that replaces meshes with
+    dead groups.
+  * All mutations of dispatcher-owned state (``server.mesh``,
+    ``server._bound``, ``platform.rimfs``) happen as **control ops on
+    the dispatcher thread** (``InferenceServer.run_on_dispatcher``):
+    the dispatcher executes one item at a time, so a control op runs
+    with no request mid-flight — the single-owner model is the drain
+    point, and a flip is atomic *between* requests by construction.
+    Expensive work (partitioning, tile binds, weight pinning, linking)
+    runs OFF the dispatcher beforehand; the flip itself is a pointer
+    swap.
+  * Hot weight swap: mount + CRC-verify the new image in the
+    background, bind a **shadow** program against it, probe it with a
+    golden input bit-compared against the live binding's answer, pre-
+    warm the current mesh's tile binds from the new image, then flip
+    atomically. Probe mismatch (or a post-swap deadline-miss spike
+    during the probation window) rolls back to the old binding — whose
+    residency was never unpinned, so rollback re-uploads **zero
+    bytes**. Events: ``swap_started / swap_probed / swap_committed /
+    swap_rolled_back`` (plus ``swap_finalized`` when probation ends).
+  * Mesh cache: previously-built meshes are kept (bounded) per group
+    count, so a 2 -> 8 -> 2 cycle returns to the *original* drivers and
+    their already-pinned weights — scaling back down moves zero weight
+    bytes.
+
+The chaos harness (tests/chaos.py) drives all of this under live
+traffic with injected faults and asserts zero failed client requests
+and bit-identical outputs throughout.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import partition as partition_mod
+from repro.core import rbl as rbl_mod
+from repro.core import rhal as rhal_mod
+from repro.core import rimfs as rimfs_mod
+
+
+class FleetError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FleetConfig:
+    """Control-loop policy knobs (hysteresis lives here, not in code)."""
+    ladder: tuple = (2, 4, 8)          # mesh sizes the scaler walks
+    min_groups: int = 2
+    max_groups: int = 8
+    scale_up_depth: int = 8            # queue depth that argues for growth
+    scale_down_depth: int = 1          # ... and for shrinking
+    scale_up_ticks: int = 2            # consecutive ticks before acting
+    scale_down_ticks: int = 3
+    miss_rate_up: float = 0.10         # shed fraction that argues for growth
+    probation_ticks: int = 3           # post-swap watch window
+    miss_spike: float = 0.25           # post-swap shed fraction -> rollback
+    spike_min_window: int = 4          # min requests before judging a spike
+    mesh_cache_cap: int = 4
+    control_timeout: float = 60.0      # dispatcher flip wait
+    probe_seed: int = 0xF1EE7          # golden-input generator seed
+    finalize_unpin: bool = True        # release old image after probation
+
+
+@dataclasses.dataclass
+class _SwapState:
+    """A committed swap under probation (rollback stays possible)."""
+    old_rimfs: Any
+    old_bound: Any
+    new_rimfs: Any
+    new_bound: Any
+    shed_baseline: int
+    served_baseline: int
+    ticks: int = 0
+
+
+class FleetController:
+    """Observe -> decide -> drain -> reshape/swap -> resume.
+
+    Owns NO request-path state: everything the dispatcher touches is
+    flipped via control ops. The controller may run its ``tick`` from a
+    background thread (``start``/``stop``) or be stepped manually for
+    deterministic tests. All actions are idempotent with respect to the
+    serving invariants: no accepted request is dropped, outputs stay
+    bit-identical to the single-device reference, and every transition
+    emits an event through the platform's unified dispatcher.
+    """
+
+    EVENTS = ("scale_started", "scale_complete", "heal_started",
+              "heal_complete", "swap_started", "swap_probed",
+              "swap_committed", "swap_rolled_back", "swap_finalized",
+              "straggler_detected", "fleet_error")
+
+    def __init__(self, server, config: Optional[FleetConfig] = None):
+        self.server = server
+        self.cfg = config or FleetConfig()
+        self.events: list = []          # (kind, payload) in emit order
+        self.history: list = []         # per-tick reports
+        self._mesh_cache: "collections.OrderedDict[int, Any]" = \
+            collections.OrderedDict()
+        if server.mesh is not None:
+            self._mesh_cache[server.mesh.n_groups] = server.mesh
+        self._swap: Optional[_SwapState] = None
+        self._up_streak = 0
+        self._down_streak = 0
+        self._last = {"shed": self._shed_total(),
+                      "served": self._served_total()}
+        self._lock = threading.RLock()  # serializes control actions
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        for kind in self.EVENTS:        # record every fleet event locally
+            server.platform.events.register(
+                kind, (lambda k: lambda p: self.events.append((k, p)))(kind))
+
+    # ----------------------------------------------------------- telemetry
+    def _post(self, kind: str, payload: dict) -> None:
+        self.server.platform.post(kind, payload)
+
+    def _shed_total(self) -> int:
+        s = self.server.scheduler.shed_count
+        eng = getattr(self.server, "engine", None)
+        if eng is not None and eng.scheduler is not None:
+            s += eng.scheduler.shed_count
+        return s
+
+    def _served_total(self) -> int:
+        return len(self.server.platform.telemetry._lat)
+
+    def observe(self) -> dict:
+        """One control-loop observation: queue pressure, miss rate since
+        the previous observation, heartbeat verdicts (the controller's
+        poll beats live groups and registers dead ones silent — exactly
+        the liveness sweep partition.execute performs), and mesh ground
+        truth."""
+        server = self.server
+        depth = server._loop.depth() + server.scheduler.pending()
+        shed, served = self._shed_total(), self._served_total()
+        shed_d = shed - self._last["shed"]
+        served_d = served - self._last["served"]
+        self._last = {"shed": shed, "served": served}
+        mesh = server.mesh
+        mesh_dead: list = []
+        if mesh is not None:
+            hb = server.platform.heartbeats
+            for gid in mesh.gids:
+                if mesh.alive(gid):
+                    # step 0 on purpose: pipeline stages beat with their
+                    # stage index during execution, which differs across
+                    # groups legitimately — the step-lag straggler rule
+                    # is for same-step data-parallel workers, not stages
+                    hb.beat(f"tile{gid}", 0)
+                else:
+                    hb.register_silent(f"tile{gid}")
+            mesh_dead = [g for g in mesh.gids if not mesh.alive(g)]
+        verdict = server.platform.heartbeats.check()
+        lat = server.platform.telemetry.summary(warmup=0)
+        return {"depth": depth, "shed_delta": shed_d,
+                "served_delta": served_d,
+                "miss_rate": shed_d / max(1, shed_d + served_d),
+                "n_groups": mesh.n_groups if mesh is not None else 1,
+                "mesh_dead": mesh_dead, "verdicts": verdict["verdicts"],
+                "failed": verdict["failed"],
+                "stragglers": verdict["stragglers"],
+                "p99": lat.get("p99")}
+
+    # -------------------------------------------------------------- policy
+    def _ladder_up(self, cur: int) -> Optional[int]:
+        for n in sorted(self.cfg.ladder):
+            if cur < n <= self.cfg.max_groups:
+                return n
+        return None
+
+    def _ladder_down(self, cur: int) -> Optional[int]:
+        for n in sorted(self.cfg.ladder, reverse=True):
+            if cur > n >= self.cfg.min_groups:
+                return n
+        return None
+
+    def decide(self, obs: dict) -> Optional[tuple]:
+        """Pure policy: observation -> action (None = hold). Hysteresis
+        via consecutive-tick streaks so one noisy sample never reshapes
+        the mesh."""
+        cfg = self.cfg
+        if obs["mesh_dead"]:
+            return ("heal", tuple(obs["mesh_dead"]))
+        pressure_up = obs["depth"] >= cfg.scale_up_depth or \
+            obs["miss_rate"] > cfg.miss_rate_up
+        pressure_down = obs["depth"] <= cfg.scale_down_depth and \
+            obs["shed_delta"] == 0
+        if pressure_up:
+            self._up_streak += 1
+            self._down_streak = 0
+        elif pressure_down:
+            self._down_streak += 1
+            self._up_streak = 0
+        else:
+            self._up_streak = self._down_streak = 0
+        cur = obs["n_groups"]
+        if self._up_streak >= cfg.scale_up_ticks:
+            nxt = self._ladder_up(cur)
+            if nxt is not None:
+                return ("scale", nxt)
+        if self._down_streak >= cfg.scale_down_ticks:
+            nxt = self._ladder_down(cur)
+            if nxt is not None:
+                return ("scale", nxt)
+        return None
+
+    def tick(self) -> dict:
+        """One full control-loop iteration; callable from tests for
+        deterministic stepping or from the background thread."""
+        with self._lock:
+            obs = self.observe()
+            report: dict = {"obs": obs, "action": None}
+            tile_stragglers = [w for w in obs["stragglers"]
+                               if w.startswith("tile")]
+            if tile_stragglers:
+                self._post("straggler_detected",
+                           {"workers": tile_stragglers})
+            if self._swap is not None:
+                report["swap"] = self._probation(obs)
+            action = self.decide(obs)
+            if action is not None:
+                report["action"] = action
+                try:
+                    if action[0] == "heal":
+                        self.heal(dead=action[1])
+                    elif action[0] == "scale":
+                        self.scale_to(action[1])
+                except Exception as e:
+                    report["error"] = repr(e)
+                    self._post("fleet_error",
+                               {"action": action, "error": repr(e)})
+            self.history.append(report)
+            return report
+
+    # ------------------------------------------------------------- scaling
+    def _build_mesh(self, n: int):
+        mesh = self._mesh_cache.get(n)
+        if mesh is not None and all(mesh.alive(g) for g in mesh.gids):
+            self._mesh_cache.move_to_end(n)
+            return mesh, True
+        self._mesh_cache.pop(n, None)   # never reuse a mesh with dead groups
+        mesh = rhal_mod.TileMesh(n)
+        return mesh, False
+
+    def _prewarm(self, mesh, bound=None, rimfs=None) -> None:
+        """Partition + bind + link + pin weights against the new mesh's
+        drivers, OFF the dispatcher thread: by flip time the first
+        request pays nothing. The per-tile bind caches and the
+        per-group-count partition cache make this idempotent."""
+        server = self.server
+        bound = bound if bound is not None else server._bound
+        rimfs = rimfs if rimfs is not None else server.platform.rimfs
+        part = partition_mod.ensure_partition(bound, mesh.n_groups)
+        partition_mod.prewarm(part, mesh, rimfs=rimfs)
+
+    def _cache_mesh(self, mesh) -> None:
+        self._mesh_cache[mesh.n_groups] = mesh
+        self._mesh_cache.move_to_end(mesh.n_groups)
+        while len(self._mesh_cache) > self.cfg.mesh_cache_cap:
+            self._mesh_cache.popitem(last=False)
+
+    def scale_to(self, n: int) -> dict:
+        """Reshape the live mesh to ``n`` tile groups without dropping a
+        request: pre-warm off-thread, flip on the dispatcher (between
+        requests), resume. Returns the scale report."""
+        with self._lock:
+            server = self.server
+            if server._bound is None:
+                raise FleetError("cannot scale: server not provisioned")
+            cur = server.mesh.n_groups if server.mesh is not None else 1
+            if n == cur and server.mesh is not None:
+                return {"from": cur, "to": n, "noop": True}
+            t0 = time.perf_counter()
+            self._post("scale_started", {"from": cur, "to": n})
+            mesh, cached = self._build_mesh(n)
+            self._prewarm(mesh)
+
+            def flip():
+                server.mesh = mesh
+                return server._loop.depth()
+
+            depth_at_flip = server.run_on_dispatcher(
+                flip, timeout=self.cfg.control_timeout)
+            if server.mesh is not None:
+                self._cache_mesh(mesh)
+            self._up_streak = self._down_streak = 0
+            report = {"from": cur, "to": n, "cached_mesh": cached,
+                      "depth_at_flip": depth_at_flip,
+                      "seconds": time.perf_counter() - t0}
+            self._post("scale_complete", report)
+            return report
+
+    def heal(self, dead: tuple = ()) -> dict:
+        """Replace a mesh with dead groups by a fresh same-size mesh.
+        In-flight stages already failed over to survivors (partition
+        re-queue); healing restores full capacity for what follows."""
+        with self._lock:
+            server = self.server
+            mesh = server.mesh
+            if mesh is None:
+                raise FleetError("no mesh to heal")
+            n = mesh.n_groups
+            dead = tuple(dead) or tuple(g for g in mesh.gids
+                                        if not mesh.alive(g))
+            t0 = time.perf_counter()
+            self._post("heal_started", {"n_groups": n, "dead": list(dead)})
+            self._mesh_cache.pop(n, None)      # poisoned: drop it
+            fresh = rhal_mod.TileMesh(n)
+            self._prewarm(fresh)
+
+            def flip():
+                server.mesh = fresh
+                return True
+
+            server.run_on_dispatcher(flip, timeout=self.cfg.control_timeout)
+            self._cache_mesh(fresh)
+            # dead tile workers answered their last poll long ago; revive
+            # the names so the fresh mesh's groups aren't born "failed"
+            for gid in fresh.gids:
+                server.platform.heartbeats.beat(f"tile{gid}", 0)
+            report = {"n_groups": n, "dead": list(dead),
+                      "seconds": time.perf_counter() - t0}
+            self._post("heal_complete", report)
+            return report
+
+    # ------------------------------------------------------------ hot swap
+    def _golden_inputs(self, program) -> dict:
+        rng = np.random.RandomState(self.cfg.probe_seed)
+        out = {}
+        for name, t in program.tensors.items():
+            if t.kind != "input":
+                continue
+            dt = np.dtype(t.dtype)
+            if dt.kind in "iu":
+                out[name] = rng.randint(0, 4, size=t.shape).astype(dt)
+            else:
+                out[name] = rng.randn(*t.shape).astype(dt)
+        return out
+
+    def swap_weights(self, image: bytes, label: str = "") -> str:
+        """Zero-downtime weight swap. Returns "committed" or
+        "rolled_back". The old binding's residency survives until
+        ``finalize`` (probation's end), so rollback is a pointer flip
+        that re-uploads zero bytes."""
+        with self._lock:
+            server = self.server
+            if server._bound is None:
+                raise FleetError("cannot swap: server not provisioned")
+            if self._swap is not None:
+                raise FleetError("swap already in probation; finalize or "
+                                 "roll back first")
+            self._post("swap_started",
+                       {"label": label, "bytes": len(image)})
+            try:
+                new_fs = rimfs_mod.mount(image)
+                new_fs.verify_image()
+            except Exception as e:
+                self._post("swap_rolled_back",
+                           {"label": label, "reason": f"mount: {e}"})
+                return "rolled_back"
+            program = server.platform.program
+            shadow = rbl_mod.bind(program, rimfs=new_fs)
+            golden = self._golden_inputs(program)
+            # reference answer from the LIVE binding, on the dispatcher
+            # (so it reflects exactly what clients are being served)
+            ref = server.run_on_dispatcher(
+                lambda: server._infer(golden),
+                timeout=self.cfg.control_timeout)
+            from repro.core.executor import Executor
+            probe = Executor().run(shadow, inputs=golden, rimfs=new_fs)
+            probe = {k: np.asarray(v) for k, v in probe.items()}
+            ok = set(probe) == set(ref) and all(
+                probe[k].shape == ref[k].shape
+                and np.array_equal(probe[k], ref[k]) for k in ref)
+            self._post("swap_probed", {"label": label, "ok": ok})
+            if not ok:
+                self._post("swap_rolled_back",
+                           {"label": label, "reason": "probe mismatch"})
+                return "rolled_back"
+            if server.mesh is not None:
+                # pin the new image into the live mesh's arenas BEFORE
+                # the flip — alongside the old image, never displacing it
+                self._prewarm(server.mesh, bound=shadow, rimfs=new_fs)
+
+            def flip():
+                old = (server.platform.rimfs, server._bound)
+                server.platform.rimfs = new_fs
+                server._bound = shadow
+                return old
+
+            old_rimfs, old_bound = server.run_on_dispatcher(
+                flip, timeout=self.cfg.control_timeout)
+            self._swap = _SwapState(
+                old_rimfs=old_rimfs, old_bound=old_bound,
+                new_rimfs=new_fs, new_bound=shadow,
+                shed_baseline=self._shed_total(),
+                served_baseline=self._served_total())
+            self._post("swap_committed", {"label": label})
+            return "committed"
+
+    def _probation(self, obs: dict) -> dict:
+        """Post-swap watch: a deadline-miss spike rolls the swap back
+        automatically; a quiet window finalizes it."""
+        swap = self._swap
+        swap.ticks += 1
+        shed = self._shed_total() - swap.shed_baseline
+        served = self._served_total() - swap.served_baseline
+        window = shed + served
+        rate = shed / max(1, window)
+        if window >= self.cfg.spike_min_window and \
+                rate > self.cfg.miss_spike:
+            self.rollback(reason=f"miss_spike: {rate:.2f} over "
+                          f"{window} requests")
+            return {"state": "rolled_back", "miss_rate": rate}
+        if swap.ticks >= self.cfg.probation_ticks:
+            self.finalize_swap()
+            return {"state": "finalized", "miss_rate": rate}
+        return {"state": "probation", "tick": swap.ticks,
+                "miss_rate": rate}
+
+    def rollback(self, reason: str = "manual") -> None:
+        """Flip back to the pre-swap binding. The old residency was kept
+        pinned through probation, so this moves zero weight bytes."""
+        with self._lock:
+            swap = self._swap
+            if swap is None:
+                raise FleetError("no swap to roll back")
+            server = self.server
+
+            def flip_back():
+                server.platform.rimfs = swap.old_rimfs
+                server._bound = swap.old_bound
+                return True
+
+            server.run_on_dispatcher(flip_back,
+                                     timeout=self.cfg.control_timeout)
+            self._release_residency(swap.new_rimfs)
+            self._swap = None
+            self._post("swap_rolled_back", {"reason": reason})
+
+    def finalize_swap(self) -> None:
+        """End probation: the new image is trusted; release the old
+        image's device residency (configurable)."""
+        with self._lock:
+            swap = self._swap
+            if swap is None:
+                return
+            freed = 0
+            if self.cfg.finalize_unpin and \
+                    swap.old_rimfs is not swap.new_rimfs:
+                freed = self._release_residency(swap.old_rimfs)
+            self._swap = None
+            self._post("swap_finalized", {"freed_bytes": freed})
+
+    @staticmethod
+    def _release_residency(fs) -> int:
+        """Unpin every driver's resident copy of ``fs`` (arena ranges
+        freed; the RIMFS host image itself is untouched)."""
+        if fs is None:
+            return 0
+        freed = 0
+        for _key, (_ref, ri) in list(fs._resident.items()):
+            freed += ri.nbytes()
+            ri.unpin()
+        fs._resident.clear()
+        return freed
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self, interval: float = 0.2) -> None:
+        """Run ``tick`` on a background thread every ``interval``s."""
+        if self._thread is not None:
+            raise FleetError("controller already running")
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.wait(interval):
+                try:
+                    self.tick()
+                except Exception as e:   # a bad tick must not kill the loop
+                    self._post("fleet_error", {"error": repr(e)})
+
+        self._thread = threading.Thread(target=loop, daemon=True,
+                                        name="fleet-controller")
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join(timeout=10)
+        self._thread = None
+
+    def summary(self) -> dict:
+        kinds = collections.Counter(k for k, _ in self.events)
+        return {"ticks": len(self.history), "events": dict(kinds),
+                "mesh_cache": sorted(self._mesh_cache),
+                "swap_in_probation": self._swap is not None}

@@ -258,6 +258,37 @@ def partition(bound: rbl_mod.BoundProgram,
     return PartitionedProgram(bound, tiles, edges)
 
 
+def ensure_partition(bound: rbl_mod.BoundProgram,
+                     n_groups: int) -> PartitionedProgram:
+    """The per-group-count partition cache: cut once per (bound, n_groups),
+    reuse forever. Shared by ``Executor.run_partitioned`` and the fleet
+    controller's mesh pre-warm, so a scale event re-cuts nothing the
+    serving path already paid for."""
+    cache = getattr(bound, "_partitions", None)
+    if cache is None:
+        cache = bound._partitions = {}
+    part = cache.get(n_groups)
+    if part is None:
+        part = cache[n_groups] = partition(bound, n_groups)
+    return part
+
+
+def prewarm(part: PartitionedProgram, mesh: TileMesh, rimfs=None) -> None:
+    """Bind + link every tile against its mesh group's driver ahead of
+    traffic, so the first request after a mesh flip pays no residency
+    upload or link cost on the dispatcher thread. Safe to run off the
+    dispatcher: it touches only the new mesh's drivers and per-tile bind
+    caches (idempotent inserts)."""
+    from repro.core.executor import Executor   # local: avoids import cycle
+    base = part.bound.buffers
+    for tile in part.tiles:
+        driver = mesh.group(tile.gid).driver
+        bt = tile.bind(driver, rimfs,
+                       weights=None if rimfs is not None else
+                       {s: base[s] for s in tile.weight_syms if s in base})
+        Executor(driver=driver).link(bt)
+
+
 # ---------------------------------------------------------------------------
 # The pipelined schedule driver
 # ---------------------------------------------------------------------------

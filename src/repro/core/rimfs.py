@@ -267,6 +267,13 @@ class ResidentImage:
         """Arena offset of the pinned range (None without an arena)."""
         return self._offsets.get(name)
 
+    def pinned_ranges(self) -> list:
+        """Sorted [(arena_offset, nbytes), ...] of every pinned file —
+        the hot-swap machinery asserts a shadow image's ranges are
+        disjoint from (and do not displace) the live image's."""
+        return sorted((off, self._host_views[name].nbytes)
+                      for name, off in self._offsets.items())
+
     def nbytes(self) -> int:
         return sum(v.nbytes for v in self._host_views.values())
 

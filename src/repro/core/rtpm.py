@@ -134,16 +134,31 @@ class WorkerState:
     last_beat: float
     step: int = 0
     alive: bool = True
+    gap_ewma: Optional[float] = None   # EWMA of inter-beat gaps (seconds)
 
 
 class HeartbeatMonitor:
-    """Deadline-policy liveness. ``clock`` injectable for determinism."""
+    """Deadline-policy liveness. ``clock`` injectable for determinism.
+
+    Two verdict tiers: a worker silent past ``deadline`` is **failed**
+    (dead until it beats again); a live worker whose silence exceeds its
+    own measured rhythm — EWMA of inter-beat gaps × ``straggler_factor``
+    — is a **straggler**. The per-worker EWMA is what lets a fleet
+    controller distinguish a slow-but-alive group from a dead one long
+    before the wall-clock deadline expires: a worker that beat every
+    50 ms and has been silent for half a second is in trouble *now*,
+    not in ``deadline`` seconds. ``straggler_floor`` keeps sub-floor
+    silences from flagging fast beaters between polls.
+    """
 
     def __init__(self, deadline: float = 10.0, straggler_factor: float = 3.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 gap_alpha: float = 0.3, straggler_floor: float = 0.05):
         self.deadline = deadline
         self.straggler_factor = straggler_factor
         self.clock = clock
+        self.gap_alpha = gap_alpha
+        self.straggler_floor = straggler_floor
         self.workers: dict[str, WorkerState] = {}
         self._lock = threading.Lock()
 
@@ -154,6 +169,13 @@ class HeartbeatMonitor:
             if w is None:
                 self.workers[worker] = WorkerState(now, step)
             else:
+                if w.alive and w.last_beat > float("-inf"):
+                    gap = max(0.0, now - w.last_beat)
+                    w.gap_ewma = gap if w.gap_ewma is None else \
+                        (1 - self.gap_alpha) * w.gap_ewma \
+                        + self.gap_alpha * gap
+                else:
+                    w.gap_ewma = None      # revival: old rhythm is stale
                 w.last_beat, w.step, w.alive = now, step, True
 
     def register_silent(self, worker: str, step: int = 0) -> None:
@@ -165,24 +187,40 @@ class HeartbeatMonitor:
                 self.workers[worker] = WorkerState(float("-inf"), step)
 
     def check(self) -> dict:
-        """Returns {"failed": [...], "stragglers": [...]}."""
+        """Returns {"failed": [...], "stragglers": [...], "median_step": n,
+        "verdicts": {worker: "failed"|"straggler"|"ok"}}.
+
+        Straggler evidence, any of: silence past ``deadline/factor``
+        (wall-clock policy), step count lagging the live median, or —
+        the per-worker rhythm signal — silence past
+        ``max(floor, gap_ewma * factor)`` for workers with a measured
+        inter-beat EWMA."""
         now = self.clock()
         failed, stragglers = [], []
+        verdicts: dict[str, str] = {}
         with self._lock:
             steps = [w.step for w in self.workers.values() if w.alive]
             median_step = sorted(steps)[len(steps) // 2] if steps else 0
             for name, w in self.workers.items():
                 if not w.alive:
+                    verdicts[name] = "failed"
                     continue
                 age = now - w.last_beat
+                rhythm_lag = w.gap_ewma is not None and \
+                    age > max(self.straggler_floor,
+                              w.gap_ewma * self.straggler_factor)
                 if age > self.deadline:
                     w.alive = False
                     failed.append(name)
+                    verdicts[name] = "failed"
                 elif age > self.deadline / self.straggler_factor or \
-                        w.step + 2 < median_step:
+                        w.step + 2 < median_step or rhythm_lag:
                     stragglers.append(name)
+                    verdicts[name] = "straggler"
+                else:
+                    verdicts[name] = "ok"
         return {"failed": failed, "stragglers": stragglers,
-                "median_step": median_step}
+                "median_step": median_step, "verdicts": verdicts}
 
 
 # ---------------------------------------------------------------------------
@@ -318,23 +356,44 @@ class ServiceLoop:
         """Stop the worker. ``drain=True`` processes everything already
         queued first (graceful SHUTDOWN); ``drain=False`` hands each
         dropped item to ``on_drop`` so its submitter can be refused
-        explicitly rather than left waiting forever."""
+        explicitly rather than left waiting forever.
+
+        ``timeout`` bounds the WHOLE call. If the worker is wedged inside
+        a handler and the drain promise cannot be kept, every still-queued
+        item is handed to ``on_drop`` on the way out (refused, not lost)
+        and the sentinel is left queued so a worker that eventually
+        unwedges still exits; the heartbeat monitor is what reports the
+        wedged dispatcher dead."""
+        deadline = time.monotonic() + timeout
         with self._submit_lock:     # no submit can land after the sentinel
             self._draining.set()
         self._drain_on_exit = drain
         if not drain:
-            try:
-                while True:
-                    got = self._q.get_nowait()
-                    if got is not _DRAIN and self.on_drop is not None:
-                        self.on_drop(got[1])
-            except queue_mod.Empty:
-                pass
+            self._hand_back()
         try:
-            self._q.put(_DRAIN, timeout=timeout)
+            self._q.put(_DRAIN, timeout=max(0.0, deadline - time.monotonic()))
         except queue_mod.Full:      # worker stuck with a full queue: the
             pass                    # heartbeat deadline is the real alarm
-        self._thread.join(timeout)
+        self._thread.join(max(0.0, deadline - time.monotonic()))
+        if self._thread.is_alive():
+            # wedged: the drain promise is broken — refuse the leftovers
+            # explicitly, then re-arm the sentinel for a late unwedge.
+            self._drain_on_exit = False
+            self._hand_back()
+            try:
+                self._q.put_nowait(_DRAIN)
+            except queue_mod.Full:
+                pass
+
+    def _hand_back(self) -> None:
+        """Drain queued (never-started) items to ``on_drop``."""
+        try:
+            while True:
+                got = self._q.get_nowait()
+                if got is not _DRAIN and self.on_drop is not None:
+                    self.on_drop(got[1])
+        except queue_mod.Empty:
+            pass
 
     def alive(self) -> bool:
         return self._thread.is_alive()

@@ -8,6 +8,12 @@ request-id frames — and reports latency CV + dispatcher telemetry.
   PYTHONPATH=src python -m repro.launch.serve --requests 64
   PYTHONPATH=src python -m repro.launch.serve --requests 64 --clients 4
   PYTHONPATH=src python -m repro.launch.serve --lm --requests 8
+  PYTHONPATH=src python -m repro.launch.serve --fleet --requests 48
+
+--fleet runs the elastic-operations demo: a FleetController scales the
+live tile mesh up and back down, hot-swaps the weight image (probe +
+atomic flip), and survives a tile-group kill — all under the same
+client traffic, with every response checked against a reference.
 """
 from __future__ import annotations
 
@@ -95,6 +101,66 @@ def serve_resnet(requests: int, batch: int, clients: int,
         server.stop()
 
 
+def serve_fleet(requests: int, groups: int = 2, peak: int = 8) -> None:
+    """Elastic fleet demo: scale cycle + kill/heal + hot swap under
+    sustained traffic, every response bit-compared to a single-device
+    reference."""
+    from repro.core import rhal, rimfs
+    from repro.core.fleet import FleetController
+
+    depth, n = 8, 24
+    prog = rctc.compile_gemm_chain(depth, n)
+    files = rctc.gemm_chain_weights(depth, n)
+    image = rimfs.pack(files)
+    server = InferenceServer(mesh=rhal.TileMesh(groups), max_queue=256)
+    addr = server.start()
+    print(f"[fleet] listening on {addr}, mesh={groups} groups")
+    fleet = FleetController(server)
+    ok = bad = 0
+    try:
+        client = Client(addr, retries=10, backoff=0.02, retry_seed=0)
+        client.provision(image, prog.encode())
+        x = np.random.RandomState(0).randn(n, n).astype(np.float32)
+        ref = client.infer(input=x)
+
+        def burst(count: int, label: str) -> None:
+            nonlocal ok, bad
+            t0 = time.perf_counter()
+            for _ in range(count):
+                out = client.infer(input=x)
+                if all(np.array_equal(ref[k], out[k]) for k in ref):
+                    ok += 1
+                else:
+                    bad += 1
+            print(f"[fleet] {label}: {count} requests, "
+                  f"{(time.perf_counter() - t0) / count * 1e3:.2f}ms avg, "
+                  f"bit_identical={bad == 0}")
+
+        share = max(4, requests // 4)
+        burst(share, f"baseline @{groups}")
+        rep = fleet.scale_to(peak)
+        print(f"[fleet] scaled {rep['from']} -> {rep['to']} in "
+              f"{rep['seconds'] * 1e3:.1f}ms")
+        burst(share, f"scaled @{peak}")
+        state = fleet.swap_weights(rimfs.pack(files), label="repack")
+        print(f"[fleet] hot swap: {state}")
+        burst(share, "post-swap")
+        server.mesh.kill(peak - 1)
+        rep = fleet.tick()
+        print(f"[fleet] killed group {peak - 1}; tick -> "
+              f"{rep['action']}")
+        burst(share, "post-heal")
+        rep = fleet.scale_to(groups)
+        print(f"[fleet] scaled back -> {rep['to']} "
+              f"(cached_mesh={rep.get('cached_mesh')})")
+        print(f"[fleet] done: ok={ok} mismatched={bad} "
+              f"events={dict(fleet.summary()['events'])}")
+        client.close()
+    finally:
+        fleet.stop()
+        server.stop()
+
+
 def serve_lm(requests: int) -> None:
     cfg = get_config("qwen2-1.5b-smoke")
     params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
@@ -129,8 +195,17 @@ def main() -> None:
     ap.add_argument("--batch-window", type=int, default=8,
                     help="dispatcher coalescing window (1 disables)")
     ap.add_argument("--lm", action="store_true")
+    ap.add_argument("--fleet", action="store_true",
+                    help="elastic fleet demo: scale cycle, hot swap, "
+                         "kill/heal under traffic")
+    ap.add_argument("--groups", type=int, default=2,
+                    help="--fleet: starting mesh size")
+    ap.add_argument("--peak", type=int, default=8,
+                    help="--fleet: scale-cycle peak mesh size")
     args = ap.parse_args()
-    if args.lm:
+    if args.fleet:
+        serve_fleet(args.requests, groups=args.groups, peak=args.peak)
+    elif args.lm:
         serve_lm(args.requests)
     else:
         serve_resnet(args.requests, args.batch, args.clients,

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import random
 import socket
 import struct
 import threading
@@ -111,6 +112,10 @@ class _Work:
     route: Optional[_Route]
     tensors: Optional[dict] = None      # parsed npz (INFER, LM path)
     meta: Optional[dict] = None         # admission metadata (LM path)
+    control: Optional[Any] = None       # fleet control op (callable): runs
+                                        # ON the dispatcher thread, between
+                                        # requests — the natural atomic
+                                        # flip point for mesh/binding swaps
 
 
 _KICK = _Work(frame=None, route=None)   # wake the dispatcher to drain
@@ -318,6 +323,9 @@ class InferenceServer:
     # ---------------------------------------------------------- dispatcher
     def _dispatch_one(self, work: _Work) -> None:
         """Runs ONLY on the ServiceLoop worker thread."""
+        if work.control is not None:            # fleet control op: between
+            work.control()                      # requests IS the drain point
+            return
         if work.frame is None:                  # kick: drain the admission q
             self._drain_plain()
             return
@@ -500,12 +508,52 @@ class InferenceServer:
     def _drop_work(self, work: _Work) -> None:
         """close(drain=False) hand-back: refuse explicitly, never drop
         a request whose submit was already acknowledged."""
+        if work.control is not None:
+            if work.meta is not None:           # fail the waiting caller
+                work.meta["error"] = RuntimeError(
+                    "control op dropped: dispatcher closing")
+                work.meta["done"].set()
+            return
         if work.frame is not None:
             work.route.send(proto.Msg.ERROR,
                             proto.pack_json({"error": "draining"}),
                             rid=work.frame.request_id,
                             flags=proto.F_DRAINING,
                             version=work.frame.version)
+
+    def run_on_dispatcher(self, fn, timeout: float = 60.0):
+        """Execute ``fn`` ON the dispatcher thread and return its result.
+
+        The dispatcher runs exactly one work item at a time, so a control
+        op observes the server between requests — no request is ever
+        mid-execution while it runs. That makes it the fleet controller's
+        atomic flip point for mesh reshapes and binding swaps: no lock
+        is added to the request path, the single-owner model IS the
+        mutual exclusion. Called from the dispatcher thread itself the
+        op runs inline (re-entrant control flows)."""
+        if threading.current_thread() is self._loop._thread:
+            return fn()
+        box: dict = {"done": threading.Event(), "result": None,
+                     "error": None}
+
+        def ctl():
+            try:
+                box["result"] = fn()
+            except BaseException as e:
+                box["error"] = e
+            finally:
+                box["done"].set()
+
+        if not self._loop.submit(_Work(frame=None, route=None, control=ctl,
+                                       meta=box)):
+            raise ServerBusy("dispatcher refused control op "
+                             "(draining or queue full)")
+        if not box["done"].wait(timeout):
+            raise TimeoutError(f"control op not executed in {timeout}s "
+                               f"(dispatcher wedged?)")
+        if box["error"] is not None:
+            raise box["error"]
+        return box["result"]
 
     def _pump_engine(self) -> bool:
         """ServiceLoop idle hook: one continuous-batching decode step,
@@ -585,13 +633,28 @@ class Client:
     (frames for other request ids are parked for their waiters, so one
     ``Client`` may be shared across threads). ``version=1`` speaks the
     legacy rid-less protocol for back-compat testing.
+
+    Backpressure retry: ``retries > 0`` makes ``infer`` re-send a request
+    refused with F_BUSY/F_SHED up to that many times, sleeping a jittered
+    exponential backoff (``backoff * 2**attempt``, capped, ×[0.5, 1.0)
+    jitter so a refused burst doesn't re-arrive in lockstep). Scale
+    events and drain windows then read as added latency instead of hard
+    failures. Off by default — zero-retry callers see refusals
+    immediately, exactly as before.
     """
 
     def __init__(self, address: tuple, version: int = 2,
-                 max_frame: int = proto.MAX_FRAME):
+                 max_frame: int = proto.MAX_FRAME, retries: int = 0,
+                 backoff: float = 0.05, backoff_cap: float = 2.0,
+                 retry_seed: Optional[int] = None):
         self.sock = socket.create_connection(address)
         self.version = version
         self.max_frame = max_frame
+        self.retries = int(retries)
+        self.backoff = backoff
+        self.backoff_cap = backoff_cap
+        self._retry_rng = random.Random(retry_seed)
+        self.retry_stats = {"retries": 0, "busy": 0, "shed": 0}
         self._send_lock = threading.Lock()
         self._cond = threading.Condition()
         self._parked: dict = {}           # rid -> Frame (out-of-order)
@@ -695,9 +758,24 @@ class Client:
     def infer(self, deadline_ms: Optional[float] = None,
               priority: Optional[int] = None,
               max_new: Optional[int] = None, **tensors) -> dict:
-        return self.result(self.infer_async(deadline_ms=deadline_ms,
-                                            priority=priority,
-                                            max_new=max_new, **tensors))
+        """One-shot inference; with ``retries`` set, bounded re-send on
+        backpressure refusals (a refused request was never executed, so
+        re-sending cannot double-run it)."""
+        attempt = 0
+        while True:
+            try:
+                return self.result(self.infer_async(
+                    deadline_ms=deadline_ms, priority=priority,
+                    max_new=max_new, **tensors))
+            except (ServerBusy, RequestShed) as e:
+                kind = "busy" if isinstance(e, ServerBusy) else "shed"
+                self.retry_stats[kind] += 1
+                if attempt >= self.retries:
+                    raise
+                delay = min(self.backoff_cap, self.backoff * (2 ** attempt))
+                time.sleep(delay * (0.5 + self._retry_rng.random() / 2))
+                attempt += 1
+                self.retry_stats["retries"] += 1
 
     def telemetry(self) -> dict:
         return proto.unpack_json(self._rpc(proto.Msg.TELEMETRY, b"").payload)

@@ -1,0 +1,336 @@
+"""Chaos-injection harness for the fleet controller (ISSUE 6 tentpole).
+
+Drives sustained client traffic against a live ``InferenceServer`` +
+``FleetController`` while injecting the fault taxonomy from DESIGN.md
+§10 — tile-group kills, DMA delays, CRC-corrupted frames, a bad-weight
+swap — and asserts the system converges:
+
+  * zero failed client requests (backpressure refusals retried by the
+    client count as latency, not failure),
+  * every response bit-identical to the precomputed single-device
+    reference,
+  * the scale cycle (base -> peak -> base), one hot weight swap and one
+    tile-group kill+heal all complete mid-traffic,
+  * the forced bad-weight swap is caught by the conformance probe and
+    rolled back with the old binding still serving.
+
+Three consumers share this file: ``tests/test_fleet.py`` imports
+``run_chaos`` for tier-1 coverage, ``benchmarks/run.py`` loads it for
+the ``fleet/*`` BENCH rows, and CI's chaos-matrix job executes it
+directly (``python tests/chaos.py --groups N --seed S``) — exit 1 on
+any failed invariant.
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.core import rctc, rhal, rimfs
+from repro.core.executor import Executor
+from repro.core.fleet import FleetConfig, FleetController
+from repro.core import rbl
+from repro.serving import protocol as proto
+from repro.serving.server import Client, InferenceServer
+
+
+def delay_dma(mesh, gid: int, seconds: float):
+    """Fault: slow one group's async DMA issue path by ``seconds`` per
+    transfer (a congested interconnect segment, not a dead one).
+    Returns an undo callable."""
+    driver = mesh.group(gid).driver
+    orig = driver.dma_async
+
+    def slow(host_buf, direction, prefetched=False):
+        time.sleep(seconds)
+        return orig(host_buf, direction, prefetched=prefetched)
+
+    driver.dma_async = slow
+    return lambda: setattr(driver, "dma_async", orig)
+
+
+def inject_corrupt_frame(address) -> bool:
+    """Fault: send an INFER frame whose CRC trailer is flipped. A healthy
+    server answers with a connection-level protocol ERROR (or tears the
+    connection down) without disturbing any other route. Returns True
+    when the server reacted that way."""
+    s = socket.create_connection(address)
+    try:
+        frame = bytearray(proto.encode_frame(proto.Msg.INFER_REQUEST,
+                                             b"\x00" * 64))
+        frame[-1] ^= 0xFF                       # corrupt the CRC-32
+        s.sendall(bytes(frame))
+        try:
+            f = proto.recv_frame_ex(s, max_frame=proto.MAX_FRAME)
+            return f.kind == proto.Msg.ERROR
+        except Exception:
+            return True                         # server closed on us: fine
+    finally:
+        s.close()
+
+
+def _percentile(xs: list, p: float) -> float:
+    if not xs:
+        return 0.0
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(p * len(xs)))]
+
+
+def run_chaos(groups: int = 2, seed: int = 7, requests: int = 90,
+              clients: int = 3, depth: int = 8, n: int = 24,
+              scale_peak: int = 8, retries: int = 10,
+              dma_delay_s: float = 0.2, p99_bound_s: float = 30.0,
+              pace_s: float = 0.03, verbose: bool = False) -> dict:
+    """One full chaos scenario; returns the report dict (see asserts in
+    ``check_report`` for the invariants it must satisfy)."""
+    if scale_peak == groups:                   # a scale cycle needs two
+        scale_peak = 2 if groups > 2 else 8    # distinct mesh sizes
+    rng = np.random.RandomState(seed)
+    prog = rctc.compile_gemm_chain(depth, n)
+    files = rctc.gemm_chain_weights(depth, n)
+    image = rimfs.pack(files)
+    # reference answers for a pool of distinct inputs, single-device
+    pool = [rng.randn(n, n).astype(np.float32) for _ in range(8)]
+    fs = rimfs.mount(image)
+    refs = []
+    for x in pool:
+        out = Executor().run(rbl.bind(prog, rimfs=fs, inputs={"input": x}))
+        refs.append({k: np.asarray(v) for k, v in out.items()})
+
+    server = InferenceServer(mesh=rhal.TileMesh(groups), max_queue=256)
+    addr = server.start()
+    boot = Client(addr)
+    boot.provision(image, prog.encode())
+    boot.close()
+
+    # The fault schedule scripts the scale transitions itself, so the
+    # depth-based autoscaler is parked (thresholds unreachable) — ticks
+    # still run the full observe/heal/probation machinery. The
+    # autoscaler's own decision loop is covered by tests/test_fleet.py.
+    cfg = FleetConfig(min_groups=min(2, groups),
+                      max_groups=max(scale_peak, groups),
+                      scale_up_depth=10 ** 6, scale_down_depth=-1)
+    fleet = FleetController(server, cfg)
+
+    done = threading.Event()
+    counters = {"sent": 0, "ok": 0, "mismatch": 0}
+    failures: list = []
+    latencies: list = []
+    lock = threading.Lock()
+    per_client = requests // clients
+
+    def traffic(cid: int) -> None:
+        cl = Client(addr, retries=retries, backoff=0.02,
+                    retry_seed=seed * 1000 + cid)
+        try:
+            for i in range(per_client):
+                j = (cid * per_client + i) % len(pool)
+                with lock:
+                    counters["sent"] += 1
+                t0 = time.perf_counter()
+                try:
+                    out = cl.infer(input=pool[j])
+                except Exception as e:
+                    with lock:
+                        failures.append(f"client{cid} req{i}: {e!r}")
+                    continue
+                dt = time.perf_counter() - t0
+                ident = set(out) == set(refs[j]) and all(
+                    np.array_equal(out[k], refs[j][k]) for k in refs[j])
+                with lock:
+                    latencies.append(dt)
+                    if ident:
+                        counters["ok"] += 1
+                    else:
+                        counters["mismatch"] += 1
+                time.sleep(pace_s)      # sustained traffic, not a burst:
+                                        # the fault schedule lands
+                                        # mid-stream, not after the fact
+        finally:
+            cl.close()
+
+    threads = [threading.Thread(target=traffic, args=(c,), daemon=True)
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+
+    # -------- coordinator: deterministic fault schedule at traffic
+    # milestones (fractions of total completed requests), seeded by the
+    # CLI so the chaos-matrix job replays the same schedule.
+    total = per_client * clients
+    kill_gid = int(rng.randint(1, scale_peak))
+    report: dict = {"schedule": {"seed": seed, "kill_gid": kill_gid},
+                    "faults": [], "timings": {}}
+
+    def timed(key: str, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        report["timings"][key] = time.perf_counter() - t0
+        return out
+
+    def completed() -> int:
+        with lock:
+            return counters["ok"] + counters["mismatch"] + \
+                len(failures)
+
+    def wait_frac(frac: float, timeout: float = 120.0) -> None:
+        deadline = time.monotonic() + timeout
+        while completed() < int(total * frac):
+            if time.monotonic() > deadline or done.is_set():
+                return
+            fleet.tick()
+            time.sleep(0.02)
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(f"[chaos {completed():3d}/{total}] {msg}", flush=True)
+
+    undo_delay = None
+    try:
+        wait_frac(0.10)
+        log(f"scale {groups} -> {scale_peak}")
+        timed("scale_up", lambda: fleet.scale_to(scale_peak))
+        report["faults"].append("scale_up")
+
+        wait_frac(0.25)
+        log(f"kill tile group {kill_gid}")
+        server.mesh.kill(kill_gid)          # in-flight stages fail over
+        report["faults"].append(f"kill_g{kill_gid}")
+        t_kill = time.perf_counter()
+        for _ in range(20):                 # converge: tick until healed
+            rep = fleet.tick()
+            if any(k == "heal_complete" for k, _ in fleet.events):
+                break
+            time.sleep(0.02)
+        report["timings"]["kill_to_heal"] = time.perf_counter() - t_kill
+        log("healed")
+
+        wait_frac(0.40)
+        log("hot swap: identical weights, repacked image")
+        good = timed("swap_good", lambda: fleet.swap_weights(
+            rimfs.pack(files), label="repack"))
+        report["good_swap"] = good
+        report["faults"].append("swap_good")
+        for _ in range(cfg.probation_ticks + 1):   # probation -> finalize
+            fleet.tick()
+        fleet.finalize_swap()                      # no-op if already done
+
+        wait_frac(0.55)
+        log("hot swap: WRONG weights (probe must roll back)")
+        bad_files = rctc.gemm_chain_weights(depth, n, seed=seed + 1)
+        bad = timed("swap_bad", lambda: fleet.swap_weights(
+            rimfs.pack(bad_files), label="bad"))
+        report["bad_swap"] = bad
+        report["faults"].append("swap_bad")
+
+        wait_frac(0.68)
+        log(f"DMA delay {dma_delay_s}s on group 0")
+        undo_delay = delay_dma(server.mesh, 0, dma_delay_s)
+        report["faults"].append("dma_delay_g0")
+        # the slow group stretches the dispatcher's inter-beat gap —
+        # sample the EWMA straggler verdict while the delay is live
+        straggler_seen = False
+        for _ in range(40):
+            v = server.platform.heartbeats.check()
+            if v["verdicts"].get("dispatcher") == "straggler":
+                straggler_seen = True
+                break
+            time.sleep(0.03)
+        undo_delay()
+        undo_delay = None
+        report["dispatcher_straggler_seen"] = straggler_seen
+
+        wait_frac(0.80)
+        log("corrupt-CRC frame on a sacrificial connection")
+        report["crc_fault_contained"] = inject_corrupt_frame(addr)
+        report["faults"].append("crc_corruption")
+
+        wait_frac(0.90)
+        log(f"scale {scale_peak} -> {groups}")
+        timed("scale_down", lambda: fleet.scale_to(groups))
+        report["faults"].append("scale_down")
+
+        for t in threads:
+            t.join(timeout=180)
+        done.set()
+    finally:
+        if undo_delay is not None:
+            undo_delay()
+        fleet.stop()
+        server.stop()
+
+    report.update({
+        "sent": counters["sent"], "ok": counters["ok"],
+        "failed": len(failures), "failures": failures[:10],
+        "mismatches": counters["mismatch"],
+        "retries": None,   # per-client; summed below when needed
+        "p50_s": _percentile(latencies, 0.50),
+        "p99_s": _percentile(latencies, 0.99),
+        "p99_bound_s": p99_bound_s,
+        "n_groups_final": server.mesh.n_groups,
+        "events": [k for k, _ in fleet.events],
+        "fleet": fleet.summary(),
+    })
+    return report
+
+
+def check_report(report: dict) -> list:
+    """The invariants the chaos scenario must satisfy; returns the list
+    of violations (empty == converged)."""
+    bad = []
+    if report["failed"]:
+        bad.append(f"{report['failed']} failed requests: "
+                   f"{report['failures']}")
+    if report["mismatches"]:
+        bad.append(f"{report['mismatches']} non-bit-identical responses")
+    if report["ok"] != report["sent"]:
+        bad.append(f"ok {report['ok']} != sent {report['sent']}")
+    if report.get("good_swap") != "committed":
+        bad.append(f"good swap not committed: {report.get('good_swap')}")
+    if report.get("bad_swap") != "rolled_back":
+        bad.append(f"bad swap not rolled back: {report.get('bad_swap')}")
+    if not report.get("crc_fault_contained"):
+        bad.append("CRC corruption was not contained")
+    ev = report["events"]
+    for needed in ("scale_complete", "heal_complete", "swap_committed",
+                   "swap_probed", "swap_rolled_back"):
+        if needed not in ev:
+            bad.append(f"missing fleet event {needed!r}")
+    if report["p99_s"] > report["p99_bound_s"]:
+        bad.append(f"p99 {report['p99_s']:.3f}s past bound "
+                   f"{report['p99_bound_s']:.3f}s")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--requests", type=int, default=90)
+    ap.add_argument("--clients", type=int, default=3)
+    ap.add_argument("--scale-peak", type=int, default=8)
+    ap.add_argument("--p99-bound-s", type=float, default=30.0)
+    ap.add_argument("-v", "--verbose", action="store_true")
+    args = ap.parse_args(argv)
+    report = run_chaos(groups=args.groups, seed=args.seed,
+                       requests=args.requests, clients=args.clients,
+                       scale_peak=args.scale_peak,
+                       p99_bound_s=args.p99_bound_s, verbose=args.verbose)
+    violations = check_report(report)
+    print(f"chaos: sent={report['sent']} ok={report['ok']} "
+          f"failed={report['failed']} mismatches={report['mismatches']} "
+          f"p50={report['p50_s'] * 1e3:.1f}ms "
+          f"p99={report['p99_s'] * 1e3:.1f}ms "
+          f"straggler_seen={report.get('dispatcher_straggler_seen')} "
+          f"faults={report['faults']} events={report['fleet']['events']}")
+    for v in violations:
+        print(f"VIOLATION: {v}", file=sys.stderr)
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -335,3 +335,67 @@ def test_all_tiles_dead_raises(rng):
     bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
     with pytest.raises(rhal.TileFailure):
         Executor().run_partitioned(bound, rimfs=fs, mesh=mesh)
+
+
+def test_heartbeat_ewma_straggler_verdict():
+    """Satellite (ISSUE 6): a worker with an established beat rhythm is
+    flagged ``straggler`` once its silence exceeds the EWMA of its own
+    inter-beat gaps times ``straggler_factor`` — long before the
+    wall-clock deadline would notice."""
+    t = [0.0]
+    mon = HeartbeatMonitor(deadline=1000.0, straggler_factor=3.0,
+                           clock=lambda: t[0])
+    for i in range(1, 6):                      # rhythm: one beat per 1.0s
+        t[0] = float(i)
+        mon.beat("rhythmic", step=i)
+        mon.beat("other", step=i)
+    assert abs(mon.workers["rhythmic"].gap_ewma - 1.0) < 1e-9
+    t[0] = 10.0
+    mon.beat("other", step=6)                  # keeps beating (gap ewma
+    mon.beat("fresh", step=5)                  # adapts); fresh: one beat,
+    v = mon.check()                            # no rhythm yet
+    assert v["verdicts"]["rhythmic"] == "straggler"   # 5s silent vs ~1s
+    assert v["verdicts"]["other"] == "ok"
+    assert v["verdicts"]["fresh"] == "ok"      # no EWMA -> no verdict
+    assert v["failed"] == []                   # alive, not dead: 5s << 1000s
+    t[0] = 10.5
+    mon.beat("rhythmic", step=6)               # it was just slow — beats
+    assert mon.check()["verdicts"]["rhythmic"] == "ok"
+
+
+def test_service_loop_close_wedged_handler_times_out_and_hands_back():
+    """Satellite (ISSUE 6): close(drain=True, timeout=...) against a
+    wedged handler honours the timeout, hands every still-queued item to
+    on_drop, and leaves the heartbeat monitor to report the dispatcher
+    dead — no indefinite hang, no silently vanished work."""
+    t = {"now": 0.0}
+    plat = Platform(deadline=5.0, clock=lambda: t["now"])
+    gate = threading.Event()
+    started = threading.Event()
+    handled, dropped = [], []
+
+    def handler(item):
+        started.set()
+        gate.wait(30)                          # wedged mid-item
+        handled.append(item)
+
+    loop = ServiceLoop(plat, handler, max_queue=8, poll=0.01,
+                       on_drop=dropped.append)
+    try:
+        assert loop.submit("a")
+        assert started.wait(5)                 # worker holds "a"
+        assert loop.submit("b") and loop.submit("c")
+        w0 = time.monotonic()
+        loop.close(drain=True, timeout=0.4)
+        elapsed = time.monotonic() - w0
+        assert elapsed < 3.0                   # timeout honoured, no hang
+        assert loop.alive()                    # worker is still wedged
+        assert dropped == ["b", "c"]           # pending work handed back
+        t["now"] = 10.0                        # silence past the deadline
+        v = plat.heartbeats.check()
+        assert "dispatcher" in v["failed"]     # monitor calls it dead
+    finally:
+        gate.set()                             # late unwedge: worker must
+    loop._thread.join(timeout=10)              # exit via re-armed sentinel
+    assert not loop.alive()
+    assert handled == ["a"]
