@@ -55,6 +55,40 @@ def check_fleet_gates(new: dict) -> int:
     return warned
 
 
+def check_integrity_gates(new: dict) -> int:
+    """Warn-only gates over the integrity/* rows (ISSUE 7): a caught
+    corruption must heal bit-identically, and the steady-state CRC tax
+    must stay modest (the plane is supposed to be cheap enough to leave
+    on). Informational, never fails the build."""
+    warned = 0
+
+    def warn(name: str, msg: str) -> None:
+        nonlocal warned
+        warned += 1
+        print(f"::warning title=integrity gate::{name}: {msg}")
+
+    d = new.get("integrity/corrupt_retry_recovery", {}).get("derived", "")
+    if d:
+        if "bit_identical=True" not in d:
+            warn("integrity/corrupt_retry_recovery",
+                 "corruption recovery not bit-identical")
+        m = re.search(r"recovered=(\d+)", d)
+        if m and int(m.group(1)) == 0:
+            warn("integrity/corrupt_retry_recovery",
+                 "no retry-recovered transfers recorded")
+    d = new.get("integrity/crc_verify_overhead", {}).get("derived", "")
+    if d:
+        # the modeled verify pays a host readback a real DMA engine
+        # computes inline, so the bound is the pathological level, not
+        # a production budget
+        m = re.search(r"overhead=(-?[\d.]+)%", d)
+        if m and float(m.group(1)) > 1000.0:
+            warn("integrity/crc_verify_overhead",
+                 f"CRC verification tax {m.group(1)}% past 1000% "
+                 f"(runaway verify path)")
+    return warned
+
+
 def load(path: str) -> dict:
     try:
         with open(path) as f:
@@ -76,6 +110,7 @@ def main(argv=None) -> int:
     if not old or not new:
         return 0
     fleet_warnings = check_fleet_gates(new)
+    integrity_warnings = check_integrity_gates(new)
 
     regressed = improved = 0
     for name in sorted(set(old) & set(new)):
@@ -98,7 +133,8 @@ def main(argv=None) -> int:
         print(f"::warning title=bench row removed::{name}")
     print(f"bench-compare: {regressed} regressed, {improved} improved, "
           f"{len(set(old) & set(new))} compared, "
-          f"{fleet_warnings} fleet-gate warnings "
+          f"{fleet_warnings} fleet-gate warnings, "
+          f"{integrity_warnings} integrity-gate warnings "
           f"(threshold +{args.threshold:.0%}, warn-only)")
     return 0                             # NEVER fails the build
 

@@ -167,6 +167,10 @@ class Executor:
             return self.run_interpreted(bound, inputs=inputs, rimfs=rimfs,
                                         trace_ops=True, probe=probe)
         linked = self.link(bound)
+        istats0 = None
+        if self.rtpm is not None:
+            istats0 = {k: self.driver.stats.get(k, 0)
+                       for k in ("dma_retry", "dma_crc_mismatch")}
         slots = linked.fresh_slots(bound.buffers, inputs)
         for sym, i in linked.missing_inputs:
             if slots[i] is None:
@@ -216,6 +220,14 @@ class Executor:
             self.rtpm.post("dma_complete",
                            {"bytes_moved": plan.bytes_moved,
                             "bytes_overlapped": plan.bytes_overlapped})
+        if istats0 is not None:
+            # surface integrity-plane activity (corruptions caught and
+            # retried in the driver) as telemetry counter deltas
+            for key, kind in (("dma_retry", "dma_retry"),
+                              ("dma_crc_mismatch", "integrity_error")):
+                delta = self.driver.stats.get(key, 0) - istats0[key]
+                if delta:
+                    self.rtpm.post(kind, {"n": delta, "source": "executor"})
         if probe_dev is not None:
             _probe_flush(probe, probe_dev)
         out = {}

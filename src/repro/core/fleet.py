@@ -325,6 +325,11 @@ class FleetController:
             t0 = time.perf_counter()
             self._post("heal_started", {"n_groups": n, "dead": list(dead)})
             self._mesh_cache.pop(n, None)      # poisoned: drop it
+            if server.platform.rimfs is not None:
+                # tile-group death integrity sweep: the fresh mesh must
+                # only ever prewarm from a CRC-clean weight store
+                server.platform.rimfs.fsck(strict=False)
+                self._post("rimfs_fsck", {"phase": "heal"})
             fresh = rhal_mod.TileMesh(n)
             self._prewarm(fresh)
 

@@ -1,0 +1,57 @@
+"""Integrity plane primitives — the unified fault taxonomy anchor.
+
+With no OS underneath, the runtime owns every guarantee an OS (or a
+filesystem, or a DMA engine with ECC) would normally provide. This module
+holds the pieces every layer shares:
+
+  * ``IntegrityError`` — the *recoverable* data-integrity fault class.
+    A checksum mismatch on a DMA payload, a torn RIMFS write, a resident
+    buffer that no longer matches its file CRC: all detectable, all
+    recoverable by re-issuing from a trusted source. ``rimfs.RIMFSError``
+    subclasses it, so the whole taxonomy (DESIGN.md §11) narrows to one
+    ``except IntegrityError`` at the recovery layer.
+  * ``payload_crc`` — CRC-32 over a buffer's bytes, the one checksum
+    shared by RIMFS file entries, RIMFS image trailers and DMA tickets
+    (a ticket's CRC can therefore be validated *against the file it was
+    read from*, not only against itself).
+  * ``IntegrityConfig`` — per-driver policy: verification on/off (the
+    benchmarked CRC-on/off overhead row flips this) and the bounded
+    in-place retry budget for corrupted transfers.
+
+Deliberately dependency-light (stdlib + numpy only): RHAL, RIMFS and RTPM
+all import it without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+
+class IntegrityError(RuntimeError):
+    """Detected data corruption (checksum mismatch, torn write, poisoned
+    residency). Recoverable by construction: every raiser has a trusted
+    source to re-issue from, so catching layers retry once before
+    escalating. ``kind`` tags the telemetry counter that increments."""
+
+    def __init__(self, message: str, kind: str = "integrity"):
+        super().__init__(message)
+        self.kind = kind
+
+
+@dataclasses.dataclass
+class IntegrityConfig:
+    """Driver-level integrity policy (one instance per HalDriver)."""
+    enabled: bool = True       # stamp + verify DMA payload CRCs
+    dma_retries: int = 2       # in-place re-issues before escalating
+
+
+def payload_crc(buf) -> int:
+    """CRC-32 over a buffer's raw bytes (host- or device-resident; a
+    device array is materialized through ``np.asarray`` — on the modeled
+    backend that is the same host view the DMA engine reads)."""
+    a = np.asarray(buf)
+    if not a.flags["C_CONTIGUOUS"]:
+        a = np.ascontiguousarray(a)
+    return zlib.crc32(a.tobytes()) & 0xFFFFFFFF

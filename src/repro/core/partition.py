@@ -335,6 +335,10 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
         tried: set = set()
         while True:
             group = mesh.group(gid)
+            mesh.active_gid = gid      # watchdog target for a hung stage
+            ist0 = {k: group.driver.stats.get(k, 0)
+                    for k in ("dma_retry", "dma_crc_mismatch")} \
+                if platform is not None else None
             try:
                 stage_in = {s: feed[s] for s in tile.input_syms
                             if s in feed}
@@ -360,9 +364,30 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
                     # per-stage busy time (occupancy accounting for the
                     # benchmark's bubble-fraction column)
                     stage_times.append((gid, time.perf_counter() - t0))
+                if ist0 is not None:
+                    # corruptions the driver caught + retried this stage
+                    # surface as telemetry counters (DESIGN.md §11)
+                    for key, kind in (("dma_retry", "dma_retry"),
+                                      ("dma_crc_mismatch",
+                                       "integrity_error")):
+                        d = group.driver.stats.get(key, 0) - ist0[key]
+                        if d:
+                            platform.post(kind, {"n": d, "group": gid})
                 break
             except TileFailure:
                 tried.add(gid)
+                mesh.active_gid = None
+                if rimfs is not None:
+                    # post-mortem integrity sweep: a tile-group death may
+                    # have interrupted a write-side path — re-verify the
+                    # store's CRCs before any survivor re-binds from it
+                    rimfs.fsck(strict=False)
+                if platform is not None:
+                    platform.post("tile_failure",
+                                  {"group": gid, "stage": stage_idx})
+                    if rimfs is not None:
+                        platform.post("rimfs_fsck",
+                                      {"phase": "tile_failure"})
                 if platform is not None:
                     # liveness sweep: live groups answer the poll, the
                     # dead one cannot — the deadline policy judges
@@ -396,6 +421,7 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
                         edge.sym, buf, gid, edge.dst)
                 except TileFailure:
                     pass                       # consumer re-queues later
+        mesh.active_gid = None
         if hb is not None:
             hb.beat(f"tile{gid}", stage_idx + 1)
         if platform is not None:

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import oplib
+from repro.core.integrity import IntegrityConfig, IntegrityError, payload_crc
 from repro.core.rcb import Op
 
 ARENA_ALIGN = 128                 # matches rimfs.ALIGN: one DMA lane quantum
@@ -101,14 +102,32 @@ class DeviceArena:
         self.bytes_in_use = 0
         self.high_water = 0
         self.n_allocs = 0
+        self.poisoned = False          # quarantined after a watchdog kill
 
     # ------------------------------------------------------------------ api
     def _round(self, nbytes: int) -> int:
         nbytes = max(1, int(nbytes))
         return (nbytes + self.align - 1) // self.align * self.align
 
+    def quarantine(self) -> None:
+        """Poison the arena: a hung/killed owner may have left any live
+        range half-written, so no range is handed out again until the
+        pinned contents are re-validated against RIMFS CRCs
+        (``TileMesh.revive``) — ``alloc`` raises until then."""
+        self.poisoned = True
+
+    def clear_quarantine(self) -> None:
+        self.poisoned = False
+
     def alloc(self, nbytes: int) -> int:
         """Reserve an aligned range; returns its slab offset."""
+        if self.poisoned:
+            # raised as TileFailure so the stage-re-queue machinery
+            # treats a quarantined arena exactly like the dead group
+            # that owns it (failover to a survivor, not a hard error)
+            raise TileFailure(
+                "arena quarantined: owner was preempted as hung — "
+                "re-validate resident contents before reuse")
         size = self._round(nbytes)
         for i, (off, avail) in enumerate(self._free):
             if avail >= size:
@@ -184,12 +203,24 @@ class DmaTicket:
     ``redeemed`` is flipped by the first ``dma_wait`` — a second redemption
     raises ``DmaError`` (on a raw-pointer backend the descriptor is recycled
     at wait time, so a double wait would observe another transfer's state).
+
+    Integrity plane (DESIGN.md §11): ``crc`` is the CRC-32 of the source
+    payload stamped at ISSUE time, before the engine touches the bytes;
+    ``src`` retains the source buffer so a mismatch at redeem can re-issue
+    the transfer in place (bounded by the driver's
+    ``integrity.dma_retries``) before escalating to ``IntegrityError``.
+    ``crc is None`` marks an unverifiable transfer (d2h pulls, symbolic
+    trace tickets) — those redeem unchecked; device-side corruption is
+    instead caught by RIMFS CRC re-validation.
     """
     buf: Any
     direction: str
     nbytes: int
     prefetched: bool = False
     redeemed: bool = False
+    crc: Optional[int] = None
+    src: Any = None
+    retries: int = 0
 
     def redeem(self) -> None:
         """Mark redemption; exactly-once is enforced, not assumed."""
@@ -233,6 +264,12 @@ class HalDriver:
     dma_async_batch: Optional[Callable[[list, str], list]] = None
     # Optional device arena backing alloc/free and RIMFS residency.
     arena: Optional[DeviceArena] = None
+    # Integrity policy: DMA payload CRC stamping/verification + bounded
+    # retry (DESIGN.md §11). Shared by reference with the closures the
+    # factory builds, so flipping ``integrity.enabled`` at runtime (the
+    # CRC-on/off benchmark row) takes effect immediately.
+    integrity: IntegrityConfig = dataclasses.field(
+        default_factory=IntegrityConfig)
     # Per-driver compiled-handler memo (core/linker.py): identical
     # (opcode, attrs) sites across links — e.g. every tile of a
     # partitioned program — share ONE specialized handler instead of
@@ -307,6 +344,18 @@ def make_eager_driver(device: Optional[jax.Device] = None,
         return jax.block_until_ready(buf) if hasattr(buf, "block_until_ready") \
             else buf
 
+    def _stamp(ticket, host_buf):
+        """Stamp the source payload's CRC-32 onto the ticket at ISSUE
+        time (before any engine touch) and retain the source buffer for
+        in-place retry. d2h is never stamped: the reference bytes only
+        exist device-side, and reading them at issue would force the
+        host sync split-phase DMA exists to avoid — device-side
+        corruption is covered by RIMFS CRC re-validation instead."""
+        if d.integrity.enabled and ticket.direction != "d2h":
+            ticket.crc = payload_crc(host_buf)
+            ticket.src = host_buf
+        return ticket
+
     def dma_async(host_buf, direction, prefetched=False):
         """Issue half: returns a ticket immediately, no host sync.
 
@@ -332,16 +381,40 @@ def make_eager_driver(device: Optional[jax.Device] = None,
             # zero-copy interconnect would never pay. Bytes/stats are
             # still counted above; cross-device or host-sourced d2d
             # still stages through device_put below.
-            return DmaTicket(host_buf, direction, nbytes, prefetched)
+            return _stamp(DmaTicket(host_buf, direction, nbytes,
+                                    prefetched), host_buf)
         buf = jax.device_put(jnp.asarray(host_buf), device)
-        return DmaTicket(buf, direction, nbytes, prefetched)
+        return _stamp(DmaTicket(buf, direction, nbytes, prefetched),
+                      host_buf)
 
     def dma_wait_(ticket):
         d._count("dma_ticket_wait")
         ticket.redeem()                            # double-wait raises
         if ticket.direction == "d2h":
             return np.asarray(ticket.buf)          # materialize on host
-        return ticket.buf                          # ordered by data flow
+        if ticket.crc is None or not d.integrity.enabled:
+            return ticket.buf                      # ordered by data flow
+        # endpoint verification: delivered payload vs issue-time CRC,
+        # with a bounded in-place re-issue from the retained source
+        # before escalating (DESIGN.md §11)
+        d._count("dma_crc_checked")
+        buf = ticket.buf
+        for attempt in range(d.integrity.dma_retries + 1):
+            if payload_crc(buf) == ticket.crc:
+                if attempt:
+                    ticket.retries = attempt
+                    d._count("dma_retry_recovered")
+                ticket.buf = buf
+                return buf
+            d._count("dma_crc_mismatch")
+            if attempt >= d.integrity.dma_retries:
+                break
+            d._count("dma_retry")
+            buf = jax.device_put(jnp.asarray(ticket.src), device)
+        raise IntegrityError(
+            f"DMA payload CRC mismatch ({ticket.direction}, "
+            f"{ticket.nbytes}B) after {d.integrity.dma_retries} "
+            f"in-place retries", kind="dma_crc")
 
     def dma_async_batch(host_bufs, direction, prefetched=False):
         """One engine call for a whole transfer stream: n buffers move
@@ -360,8 +433,8 @@ def make_eager_driver(device: Optional[jax.Device] = None,
             return [DmaTicket(h, "d2h", nb, prefetched)
                     for h, nb in zip(host_bufs, sizes)]
         bufs = jax.device_put(list(host_bufs), device)
-        return [DmaTicket(b, direction, nb, prefetched)
-                for b, nb in zip(bufs, sizes)]
+        return [_stamp(DmaTicket(b, direction, nb, prefetched), h)
+                for b, h, nb in zip(bufs, host_bufs, sizes)]
 
     def dispatch_compute(op, srcs, attrs):
         d._count("dispatch")
@@ -537,6 +610,11 @@ class TileMesh:
             self.groups.append(group)
         # (src_gid, dst_gid) -> {"bytes", "transfers", "syms"}
         self.edge_stats: dict[tuple, dict] = {}
+        # gid of the group currently executing a partitioned stage.
+        # Written only by the dispatcher thread (partition.execute), read
+        # by the watchdog to target a hung dispatch's group — a benign
+        # single-writer race by design.
+        self.active_gid: Optional[int] = None
 
     # ----------------------------------------------------------------- api
     @property
@@ -554,11 +632,37 @@ class TileMesh:
         return self.groups[gid].alive
 
     def kill(self, gid: int) -> None:
-        """Fault injection: the group fails at its next hardware touch."""
-        self.groups[gid].alive = False
+        """Fault injection / watchdog preemption: the group fails at its
+        next hardware touch, and its arena is QUARANTINED — a killed
+        owner may have left any buffer half-written, so no range is
+        handed out again until ``revive`` re-validates the pinned
+        contents against RIMFS CRCs."""
+        group = self.groups[gid]
+        group.alive = False
+        if group.driver.arena is not None:
+            group.driver.arena.quarantine()
 
-    def revive(self, gid: int) -> None:
-        self.groups[gid].alive = True
+    def revive(self, gid: int, rimfs=None) -> None:
+        """Bring a killed group back. With ``rimfs`` given, every file
+        the group's driver holds resident is CRC-compared against the
+        image before the arena's quarantine lifts — a corrupted weight
+        copy raises ``IntegrityError`` instead of silently serving.
+        Without ``rimfs`` (no residency to check) the quarantine lifts
+        unverified — fault-injection tests own that risk explicitly."""
+        group = self.groups[gid]
+        arena = group.driver.arena
+        if arena is not None and arena.poisoned:
+            if rimfs is not None:
+                entry = rimfs._resident.get(id(group.driver))
+                ri = entry[1] if entry is not None \
+                    and entry[0]() is group.driver else None
+                if ri is not None and not ri.revalidate():
+                    raise IntegrityError(
+                        f"tile group {gid}: resident weights fail CRC "
+                        f"re-validation — arena stays quarantined",
+                        kind="residency_crc")
+            arena.clear_quarantine()
+        group.alive = True
 
     @property
     def primary(self) -> HalDriver:

@@ -22,7 +22,9 @@ payload (serving/protocol.py).
 from __future__ import annotations
 
 import io
+import itertools
 import json
+import os
 import pathlib
 import struct
 import weakref
@@ -31,12 +33,20 @@ from typing import Mapping, Optional, Union
 
 import numpy as np
 
+from repro.core.integrity import IntegrityError, payload_crc
+
 MAGIC = b"RIMF"
 ALIGN = 128          # GMIO-alignment analogue: TPU-friendly 128B lanes
 
 
-class RIMFSError(ValueError):
-    pass
+class RIMFSError(IntegrityError, ValueError):
+    """RIMFS-level integrity/format fault. Subclasses ``IntegrityError``
+    so the unified taxonomy (DESIGN.md §11) narrows to one recoverable
+    class at the recovery layer, and ``ValueError`` for the seed-era
+    callers that catch it as a format error."""
+
+    def __init__(self, message: str, kind: str = "rimfs"):
+        super().__init__(message, kind=kind)
 
 
 def _align(n: int) -> int:
@@ -94,9 +104,18 @@ def pack(files: Mapping[str, np.ndarray], *, version: int = 1) -> bytes:
 
 class RIMFS:
     """A mounted image. All reads are zero-copy views into the backing
-    buffer; ``verify()`` checks per-file CRCs without copying."""
+    buffer; ``verify()`` checks per-file CRCs without copying.
 
-    def __init__(self, data: Union[bytes, bytearray, memoryview, np.memmap]):
+    Integrity plane (DESIGN.md §11): with ``verify_reads`` on (default)
+    every file's CRC is checked the FIRST time it is opened — ``read``,
+    ``resident`` pinning, bind-time weight resolution all flow through
+    here — so a poisoned weight image is rejected before it ever binds,
+    not only when a caller remembers to ``verify()``. The check is
+    memoized per file; ``fsck()`` re-verifies everything and resets the
+    memo (bring-up / post-fault re-validation)."""
+
+    def __init__(self, data: Union[bytes, bytearray, memoryview, np.memmap],
+                 verify_reads: bool = True):
         self._data = data
         buf = memoryview(data) if not isinstance(data, np.memmap) else data
         magic, ver, _flags, n, ilen = struct.unpack_from("<4sHHII", buf, 0)
@@ -109,6 +128,8 @@ class RIMFS:
         self._index = {e["name"]: e for e in index}
         # per-driver residency cache: id -> (weakref(driver), ResidentImage)
         self._resident: dict[int, tuple] = {}
+        self.verify_reads = verify_reads
+        self._verified: set = set()        # files whose CRC already checked
 
     # ------------------------------------------------------------------ api
     def files(self) -> list:
@@ -117,15 +138,23 @@ class RIMFS:
     def stat(self, name: str) -> dict:
         return dict(self._index[name])
 
-    def read(self, name: str) -> np.ndarray:
-        """Zero-copy ndarray view of one file."""
+    def read(self, name: str, verify: Optional[bool] = None) -> np.ndarray:
+        """Zero-copy ndarray view of one file (CRC-checked on first
+        open unless ``verify=False`` / ``verify_reads`` off)."""
         e = self._index.get(name)
         if e is None:
             raise RIMFSError(f"no such file: {name!r}")
-        return np.frombuffer(
+        view = np.frombuffer(
             self._data, dtype=np.dtype(e["dtype"]),
             count=int(np.prod(e["shape"])) if e["shape"] else 1,
             offset=e["offset"]).reshape(e["shape"])
+        check = self.verify_reads if verify is None else verify
+        if check and name not in self._verified:
+            if (zlib.crc32(view.tobytes()) & 0xFFFFFFFF) != e["crc32"]:
+                raise RIMFSError(f"CRC mismatch in {name!r} (read)",
+                                 kind="file_crc")
+            self._verified.add(name)
+        return view
 
     def address_of(self, name: str) -> tuple:
         """(offset, nbytes) — the paper's 'physical address' for DMA."""
@@ -136,9 +165,10 @@ class RIMFS:
         names = [name] if name else self.files()
         for n in names:
             e = self._index[n]
-            view = self.read(n)
+            view = self.read(n, verify=False)
             if (zlib.crc32(view.tobytes()) & 0xFFFFFFFF) != e["crc32"]:
-                raise RIMFSError(f"CRC mismatch in {n!r}")
+                raise RIMFSError(f"CRC mismatch in {n!r}", kind="file_crc")
+            self._verified.add(n)
         return True
 
     def verify_image(self) -> bool:
@@ -146,8 +176,39 @@ class RIMFS:
             else self._data
         (crc,) = struct.unpack_from("<I", raw, len(raw) - 4)
         if crc != (zlib.crc32(raw[:-4]) & 0xFFFFFFFF):
-            raise RIMFSError("image CRC mismatch")
+            raise RIMFSError("image CRC mismatch", kind="image_crc")
         return True
+
+    def fsck(self, strict: bool = True) -> dict:
+        """Full consistency check: image trailer CRC + every per-file
+        CRC, re-verified from scratch (the read memo is reset first, so
+        corruption that landed AFTER a file's first read is caught).
+        Invoked on platform bring-up and after any tile-group death.
+        Returns a report dict; with ``strict`` (default) corruption
+        raises ``RIMFSError`` instead. An image mounted from an
+        ``ImageStore`` replays/rolls back the store's journal through
+        ``ImageStore.fsck`` first — this method checks the mounted
+        bytes."""
+        self._verified.clear()
+        report: dict = {"files": len(self._index), "bad_files": [],
+                        "image_crc_ok": True}
+        try:
+            self.verify_image()
+        except RIMFSError:
+            report["image_crc_ok"] = False
+            if strict:
+                raise
+        for n, e in self._index.items():
+            view = self.read(n, verify=False)
+            if (zlib.crc32(view.tobytes()) & 0xFFFFFFFF) != e["crc32"]:
+                report["bad_files"].append(n)
+                if strict:
+                    raise RIMFSError(f"fsck: CRC mismatch in {n!r}",
+                                     kind="file_crc")
+            else:
+                self._verified.add(n)
+        report["ok"] = report["image_crc_ok"] and not report["bad_files"]
+        return report
 
     def resident(self, driver, names: Optional[list] = None
                  ) -> "ResidentImage":
@@ -274,6 +335,17 @@ class ResidentImage:
         return sorted((off, self._host_views[name].nbytes)
                       for name, off in self._offsets.items())
 
+    def revalidate(self) -> bool:
+        """CRC-compare every pinned DEVICE buffer against its file's
+        index CRC. This is the quarantine-lift check: after a watchdog
+        kill the group's arena is poisoned until the weight copies it
+        holds are proven bit-identical to the image
+        (``TileMesh.revive``)."""
+        for name, buf in self._bufs.items():
+            if payload_crc(buf) != self.fs._index[name]["crc32"]:
+                return False
+        return True
+
     def nbytes(self) -> int:
         return sum(v.nbytes for v in self._host_views.values())
 
@@ -289,6 +361,174 @@ class ResidentImage:
         self._bufs.clear()
         if driver is not None:
             self.fs._resident.pop(id(driver), None)
+
+
+class Journal:
+    """Write-ahead intent log for journaled image installs.
+
+    Append-only records (dicts); when file-backed every append is
+    flushed + fsynced BEFORE the caller proceeds — the write-ahead
+    property an OS journal would provide. Record kinds:
+
+      intent   {txid, crc, nbytes}  an install is about to stage
+      commit   {txid}               staged payload is complete and valid
+      applied  {txid}               the visible image was flipped
+      rollback {txid}               fsck discarded the staging
+    """
+
+    def __init__(self, path: Optional[Union[str, pathlib.Path]] = None):
+        self.path = pathlib.Path(path) if path is not None else None
+        self._records: list = []
+        if self.path is not None and self.path.exists():
+            for line in self.path.read_text().splitlines():
+                if line.strip():
+                    self._records.append(json.loads(line))
+        last = max((r["seq"] for r in self._records), default=0)
+        self._seq = itertools.count(last + 1)
+
+    def append(self, kind: str, txid: int, **meta) -> dict:
+        rec = {"seq": next(self._seq), "kind": kind, "txid": txid, **meta}
+        self._records.append(rec)
+        if self.path is not None:
+            with open(self.path, "a") as f:
+                f.write(json.dumps(rec, separators=(",", ":")) + "\n")
+                f.flush()
+                os.fsync(f.fileno())
+        return rec
+
+    def records(self) -> list:
+        return list(self._records)
+
+    def pending(self) -> dict:
+        """txid -> {"intent": rec, "committed": bool} for every intent
+        without an applied/rollback resolution (the fsck worklist)."""
+        state: dict = {}
+        for r in self._records:
+            if r["kind"] == "intent":
+                state[r["txid"]] = {"intent": r, "committed": False}
+            elif r["kind"] == "commit" and r["txid"] in state:
+                state[r["txid"]]["committed"] = True
+            elif r["kind"] in ("applied", "rollback"):
+                state.pop(r["txid"], None)
+        return state
+
+
+class ImageStore:
+    """Durable home of a serving image with journaled installs.
+
+    Every install is write-ahead journaled: intent record -> stage the
+    new bytes (side buffer; a ``.stage<txid>`` file when disk-backed)
+    -> commit mark -> atomic flip (``os.replace``) -> applied mark. A
+    fault at ANY point leaves the visible image either wholly old or
+    wholly new, never a mixture; ``fsck()`` REPLAYS committed installs
+    whose flip never landed (redo) and ROLLS BACK uncommitted staging
+    (undo), then runs the mounted image's own per-file-CRC ``fsck``.
+
+    ``fail_at`` on ``install`` is the chaos-injection hook: raise at a
+    named step ("after_intent" / "after_stage" / "after_commit") to
+    model a crash mid-write — the recovery path is then exercised by
+    calling ``fsck()`` on the survivor.
+    """
+
+    def __init__(self, image: Optional[bytes] = None,
+                 path: Optional[Union[str, pathlib.Path]] = None):
+        self.path = pathlib.Path(path) if path is not None else None
+        self.journal = Journal(
+            f"{self.path}.journal" if self.path is not None else None)
+        last_tx = max((r["txid"] for r in self.journal.records()),
+                      default=0)
+        self._txids = itertools.count(last_tx + 1)
+        self._staging: dict[int, bytes] = {}
+        self._image: Optional[bytes] = None
+        if self.path is not None and self.path.exists():
+            self._image = self.path.read_bytes()
+        if image is not None:
+            self.install(image)
+
+    # ------------------------------------------------------------------ api
+    def image(self) -> Optional[bytes]:
+        """The committed (fully visible) image bytes."""
+        return self._image
+
+    def mount(self) -> RIMFS:
+        if self._image is None:
+            raise RIMFSError("image store is empty")
+        return RIMFS(self._image)
+
+    def _stage_path(self, txid: int) -> pathlib.Path:
+        return pathlib.Path(f"{self.path}.stage{txid}")
+
+    def install(self, image_bytes: bytes,
+                fail_at: Optional[str] = None) -> int:
+        """Journaled install; returns the transaction id."""
+        txid = next(self._txids)
+        self.journal.append("intent", txid,
+                            crc=zlib.crc32(image_bytes) & 0xFFFFFFFF,
+                            nbytes=len(image_bytes))
+        if fail_at == "after_intent":
+            raise IntegrityError(
+                f"injected fault: crash after intent (tx {txid})",
+                kind="journal_fault")
+        self._staging[txid] = bytes(image_bytes)
+        if self.path is not None:
+            self._stage_path(txid).write_bytes(image_bytes)
+        if fail_at == "after_stage":
+            raise IntegrityError(
+                f"injected fault: crash after stage (tx {txid})",
+                kind="journal_fault")
+        self.journal.append("commit", txid)
+        if fail_at == "after_commit":
+            raise IntegrityError(
+                f"injected fault: crash after commit (tx {txid})",
+                kind="journal_fault")
+        self._apply(txid, image_bytes)
+        return txid
+
+    def _apply(self, txid: int, image_bytes: bytes) -> None:
+        if self.path is not None:
+            tmp = pathlib.Path(f"{self.path}.tmp")
+            tmp.write_bytes(image_bytes)
+            os.replace(tmp, self.path)           # the atomic flip
+        self._image = bytes(image_bytes)
+        self.journal.append("applied", txid)
+        self._staging.pop(txid, None)
+        if self.path is not None:
+            sp = self._stage_path(txid)
+            if sp.exists():
+                sp.unlink()
+
+    def fsck(self, strict: bool = True) -> dict:
+        """Replay/roll back the journal, then fsck the mounted image.
+
+        Committed transactions whose flip never became visible are
+        re-applied from staging (CRC-checked against the intent record
+        first); everything else pending is rolled back. The visible
+        image is therefore always a fully-written, CRC-clean state."""
+        report: dict = {"replayed": [], "rolled_back": [], "image": None}
+        pend = self.journal.pending()
+        for txid in sorted(pend):
+            st = pend[txid]
+            staged = self._staging.get(txid)
+            if staged is None and self.path is not None:
+                sp = self._stage_path(txid)
+                if sp.exists():
+                    staged = sp.read_bytes()
+            intact = staged is not None and \
+                (zlib.crc32(staged) & 0xFFFFFFFF) == st["intent"]["crc"]
+            if st["committed"] and intact:
+                self._apply(txid, staged)        # redo
+                report["replayed"].append(txid)
+            else:                                # undo
+                self._staging.pop(txid, None)
+                if self.path is not None:
+                    sp = self._stage_path(txid)
+                    if sp.exists():
+                        sp.unlink()
+                self.journal.append("rollback", txid)
+                report["rolled_back"].append(txid)
+        if self._image is not None:
+            report["image"] = self.mount().fsck(strict=strict)
+        return report
 
 
 def mount(data: Union[bytes, bytearray, memoryview]) -> RIMFS:

@@ -89,6 +89,21 @@ class Telemetry:
         self._lock = threading.Lock()
         self.bytes_moved = 0
         self.bytes_overlapped = 0
+        self._counters: dict = collections.defaultdict(int)
+
+    def incr(self, name: str, n: int = 1) -> None:
+        """Monotonic fault/recovery counters (the integrity plane's
+        telemetry surface: DESIGN.md §11 maps each fault class here)."""
+        with self._lock:
+            self._counters[name] += int(n)
+
+    def counter(self, name: str) -> int:
+        with self._lock:
+            return self._counters.get(name, 0)
+
+    def counters(self) -> dict:
+        with self._lock:
+            return dict(self._counters)
 
     def record_latency(self, seconds: float) -> None:
         self._lat.append(seconds)
@@ -230,6 +245,76 @@ class HeartbeatMonitor:
 _DRAIN = object()          # sentinel: drain what's queued, then exit
 
 
+class Watchdog:
+    """Per-dispatch deadline enforcement for the ServiceLoop.
+
+    ``arm(item)`` before the handler runs, ``disarm()`` after; a monitor
+    thread polls and, once the armed dispatch outlives its budget,
+    fires ``on_hang(item)`` exactly ONCE for that dispatch (outside the
+    lock, so the hook may kill tile groups and post events freely — the
+    hung handler thread then unwedges through the normal ``TileFailure``
+    path, because the guarded driver slots start raising).
+
+    Budgets come from ``budget_fn(item)`` at arm time — the scheduler
+    EWMA × slack policy lives in the caller's closure, not here. A
+    ``None`` / non-finite budget leaves the dispatch unwatched (boot
+    grace: no EWMA observation yet means no defensible deadline).
+    """
+
+    def __init__(self, budget_fn: Callable[[Any], Optional[float]],
+                 on_hang: Callable[[Any], None], poll: float = 0.02):
+        self.budget_fn = budget_fn
+        self.on_hang = on_hang
+        self.poll = poll
+        self.stats = {"armed": 0, "preemptions": 0}
+        self._lock = threading.Lock()
+        self._gen = 0
+        self._fired_gen = -1
+        self._armed: Optional[tuple] = None     # (gen, item, deadline)
+        self._closed = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="rtpm-watchdog")
+        self._thread.start()
+
+    def arm(self, item: Any) -> None:
+        try:
+            budget = self.budget_fn(item)
+        except Exception:
+            budget = None
+        with self._lock:
+            self._gen += 1
+            if budget is None or not (0 <= budget < float("inf")):
+                self._armed = None
+                return
+            self.stats["armed"] += 1
+            self._armed = (self._gen, item, time.monotonic() + budget)
+
+    def disarm(self) -> None:
+        with self._lock:
+            self._armed = None
+
+    def _run(self) -> None:
+        while not self._closed.wait(self.poll):
+            fire = None
+            with self._lock:
+                if self._armed is not None:
+                    gen, item, deadline = self._armed
+                    if time.monotonic() >= deadline and \
+                            gen != self._fired_gen:
+                        self._fired_gen = gen   # once per dispatch
+                        self.stats["preemptions"] += 1
+                        fire = item
+            if fire is not None:
+                try:
+                    self.on_hang(fire)
+                except Exception:
+                    pass                        # the hook must never kill us
+
+    def close(self) -> None:
+        self._closed.set()
+        self._thread.join(timeout=2.0)
+
+
 class ServiceLoop:
     """Bounded work queue drained by ONE heartbeat-monitored thread.
 
@@ -254,7 +339,11 @@ class ServiceLoop:
                  name: str = "dispatcher", max_queue: int = 256,
                  poll: float = 0.02,
                  on_idle: Optional[Callable[[], bool]] = None,
-                 on_drop: Optional[Callable[[Any], None]] = None):
+                 on_drop: Optional[Callable[[Any], None]] = None,
+                 watchdog_budget: Optional[Callable[[Any],
+                                                    Optional[float]]] = None,
+                 on_hang: Optional[Callable[[Any], None]] = None,
+                 watchdog_poll: float = 0.02):
         self.platform = platform
         self.handler = handler
         self.name = name
@@ -270,6 +359,11 @@ class ServiceLoop:
         self._draining = threading.Event()
         self._drain_on_exit = True
         self._step = 0
+        self._current: Any = None             # in-flight item (worker-owned)
+        self.watchdog: Optional[Watchdog] = None
+        if watchdog_budget is not None and on_hang is not None:
+            self.watchdog = Watchdog(watchdog_budget, on_hang,
+                                     poll=watchdog_poll)
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name=f"rtpm-{name}")
         platform.heartbeats.beat(name, 0)
@@ -341,6 +435,9 @@ class ServiceLoop:
             self._step += 1
             hb.beat(self.name, self._step)
             self.queue_wait.record_latency(time.monotonic() - t_enq)
+            self._current = item
+            if self.watchdog is not None:
+                self.watchdog.arm(item)
             t0 = time.perf_counter()
             try:
                 self.handler(item)
@@ -348,6 +445,10 @@ class ServiceLoop:
                 self.stats["errors"] += 1
                 self.platform.post("dispatch_error",
                                    {"worker": self.name, "error": repr(e)})
+            finally:
+                if self.watchdog is not None:
+                    self.watchdog.disarm()
+                self._current = None
             self.stats["processed"] += 1
             self.dispatch_latency.record_latency(time.perf_counter() - t0)
 
@@ -377,13 +478,25 @@ class ServiceLoop:
         self._thread.join(max(0.0, deadline - time.monotonic()))
         if self._thread.is_alive():
             # wedged: the drain promise is broken — refuse the leftovers
-            # explicitly, then re-arm the sentinel for a late unwedge.
+            # explicitly (including the in-flight dispatch, whose
+            # submitter would otherwise wait forever; reply-once guards
+            # downstream make a late handler completion harmless), then
+            # re-arm the sentinel for a late unwedge. The watchdog stays
+            # up: its preemption is what unwedges the worker.
             self._drain_on_exit = False
             self._hand_back()
+            cur = self._current
+            if cur is not None and self.on_drop is not None:
+                try:
+                    self.on_drop(cur)
+                except Exception:
+                    pass
             try:
                 self._q.put_nowait(_DRAIN)
             except queue_mod.Full:
                 pass
+        elif self.watchdog is not None:
+            self.watchdog.close()
 
     def _hand_back(self) -> None:
         """Drain queued (never-started) items to ``on_drop``."""
@@ -399,9 +512,12 @@ class ServiceLoop:
         return self._thread.is_alive()
 
     def summary(self) -> dict:
-        return {**self.stats, "depth": self.depth(),
-                "queue_wait": self.queue_wait.summary(),
-                "dispatch": self.dispatch_latency.summary()}
+        out = {**self.stats, "depth": self.depth(),
+               "queue_wait": self.queue_wait.summary(),
+               "dispatch": self.dispatch_latency.summary()}
+        if self.watchdog is not None:
+            out["watchdog"] = dict(self.watchdog.stats)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -426,6 +542,17 @@ class Platform:
             "dma_complete",
             lambda p: self.telemetry.record_dma(
                 p.get("bytes_moved", 0), p.get("bytes_overlapped", 0)))
+        # fault-taxonomy counters (DESIGN.md §11): every integrity-plane
+        # event increments a monotonic telemetry counter so recovery is
+        # observable over the TELEMETRY wire message.
+        for kind, counter in (("integrity_error", "integrity_errors"),
+                              ("watchdog_preempt", "watchdog_preemptions"),
+                              ("dma_retry", "dma_retries"),
+                              ("rimfs_fsck", "rimfs_fscks"),
+                              ("tile_failure", "tile_failures")):
+            self.events.register(
+                kind, lambda p, c=counter: self.telemetry.incr(
+                    c, p.get("n", 1)))
 
     # ------------------------------------------------------------ provision
     def provision(self, image: Optional[bytes] = None,
@@ -436,7 +563,10 @@ class Platform:
         if image is not None:
             self.rimfs = rimfs_mod.mount(image)
             if verify:
-                self.rimfs.verify_image()
+                # bring-up fsck: image trailer + per-file CRCs (strict —
+                # a poisoned weight image must never bind)
+                self.rimfs.fsck(strict=True)
+                self.events.post("rimfs_fsck", {"phase": "provision"})
         if program_bytes is not None:
             program = RCBProgram.decode(program_bytes)
         if program is not None:

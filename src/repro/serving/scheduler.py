@@ -45,11 +45,13 @@ class DeadlineScheduler:
         self._lock = threading.Lock()
         self._shed: list[ScheduledRequest] = []
         self.shed_count = 0
+        self.observations = 0     # EWMA sample count (watchdog boot grace)
 
     # ------------------------------------------------------------------ api
     def observe_step_latency(self, seconds: float, alpha: float = 0.2):
         """EWMA of the engine's decode-step latency."""
         self.est = (1 - alpha) * self.est + alpha * seconds
+        self.observations += 1
 
     def submit(self, req: ScheduledRequest) -> None:
         key = (req.priority,

@@ -34,6 +34,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import random
+import select
 import socket
 import struct
 import threading
@@ -44,6 +45,8 @@ import numpy as np
 
 from repro.core import linker as linker_mod
 from repro.core.executor import Executor
+from repro.core.integrity import IntegrityError
+from repro.core.rhal import TileFailure
 from repro.core.rtpm import Platform, ServiceLoop
 from repro.serving import protocol as proto
 from repro.serving.scheduler import DeadlineScheduler, ScheduledRequest
@@ -77,6 +80,25 @@ class _Route:
                             struct.pack("ll", sec, usec))
         self.lock = threading.Lock()
         self.alive = True
+        self._finals: dict = {}            # id(token) -> token (reply-once)
+        self._finals_lock = threading.Lock()
+
+    def send_final(self, token: Any, kind: proto.Msg, payload: bytes,
+                   rid: int = 0, version: int = 1, flags: int = 0) -> bool:
+        """Exactly-once terminal reply for ``token`` (the request object).
+
+        A watchdog preemption racing ``close(timeout=)`` can leave two
+        parties believing they own the reply — the unwedged dispatcher
+        finishing late and the drop path refusing the in-flight item.
+        Whichever calls first wins; the loser's send is a silent no-op,
+        so a request id is NEVER answered twice. Tokens are held by
+        strong reference (id() reuse after gc would break the guard)."""
+        with self._finals_lock:
+            if id(token) in self._finals:
+                return False
+            self._finals[id(token)] = token
+        return self.send(kind, payload, rid=rid, version=version,
+                         flags=flags)
 
     def send(self, kind: proto.Msg, payload: bytes, rid: int = 0,
              version: int = 1, flags: int = 0) -> bool:
@@ -126,7 +148,9 @@ class InferenceServer:
                  artifacts: Optional[dict] = None, engine=None, mesh=None,
                  scheduler: Optional[DeadlineScheduler] = None,
                  max_queue: int = 128, max_frame: int = proto.MAX_FRAME,
-                 send_timeout: float = 30.0, batch_window: int = 8):
+                 send_timeout: float = 30.0, batch_window: int = 8,
+                 watchdog: bool = True, watchdog_slack: float = 16.0,
+                 watchdog_floor: float = 2.0, watchdog_poll: float = 0.02):
         self.platform = Platform()
         self.executor = Executor(rtpm=self.platform)
         self.artifacts = artifacts or {}
@@ -160,11 +184,22 @@ class InferenceServer:
         self._stop = threading.Event()
         self._stop_lock = threading.Lock()
         self._thread: Optional[threading.Thread] = None
+        # Execution watchdog policy: per-dispatch budget = scheduler
+        # EWMA × slack (floored — cold caches and compile stalls must
+        # not read as hangs), with a boot grace until the first EWMA
+        # observation. Only plain-RCB dispatches are watched; PROVISION
+        # / control ops / LM pumping have no defensible deadline.
+        self.watchdog_slack = watchdog_slack
+        self.watchdog_floor = watchdog_floor
+        self._executing: Any = None     # in-flight ScheduledRequest (or run)
         # the dispatcher: the ONE thread that touches device state
-        self._loop = ServiceLoop(self.platform, self._dispatch_one,
-                                 name="dispatcher", max_queue=max_queue,
-                                 on_idle=self._on_idle,
-                                 on_drop=self._drop_work)
+        self._loop = ServiceLoop(
+            self.platform, self._dispatch_one,
+            name="dispatcher", max_queue=max_queue,
+            on_idle=self._on_idle, on_drop=self._drop_work,
+            watchdog_budget=self._watchdog_budget if watchdog else None,
+            on_hang=self._preempt_hung if watchdog else None,
+            watchdog_poll=watchdog_poll)
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> tuple:
@@ -320,6 +355,37 @@ class InferenceServer:
             rid=rid, tokens_needed=1, priority=priority, deadline=deadline,
             payload=(route, rid, ver, tensors)))
 
+    # ------------------------------------------------------------ watchdog
+    def _watchdog_budget(self, token: Any) -> Optional[float]:
+        """Deadline for one armed dispatch; None == unwatched.
+
+        ``token`` is a ScheduledRequest (single dispatch) or a list of
+        them (coalesced batch — the budget scales with the run length).
+        ``_Work`` items (PROVISION, control ops, LM pump kicks) are never
+        watched at the loop level; the server arms the actual request
+        around ``_infer`` instead, so the EDF drain inside an idle hook
+        is covered identically to a kicked drain."""
+        if isinstance(token, _Work):
+            return None
+        if self.scheduler.observations == 0:
+            return None                 # boot grace: no EWMA evidence yet
+        n = len(token) if isinstance(token, list) else 1
+        return max(self.watchdog_floor,
+                   self.scheduler.est * self.watchdog_slack * n)
+
+    def _preempt_hung(self, token: Any) -> None:
+        """Watchdog hook (runs on the watchdog thread): a dispatch blew
+        its deadline. Kill the stage's tile group through the existing
+        ``TileFailure`` path — the guarded driver slots start raising in
+        the hung handler thread, which unwedges and fails the stage over
+        to a survivor (PR 3's re-queue); the dead group's arena is
+        quarantined by ``kill`` until re-validated against RIMFS CRCs."""
+        mesh = self.mesh
+        gid = getattr(mesh, "active_gid", None) if mesh is not None else None
+        self.platform.post("watchdog_preempt", {"group": gid})
+        if mesh is not None and gid is not None and mesh.alive(gid):
+            mesh.kill(gid)
+
     # ---------------------------------------------------------- dispatcher
     def _dispatch_one(self, work: _Work) -> None:
         """Runs ONLY on the ServiceLoop worker thread."""
@@ -411,19 +477,40 @@ class InferenceServer:
 
     def _dispatch_single(self, s) -> None:
         r, srid, sver, sts = s.payload
+        wd = self._loop.watchdog
+        self._executing = s
         t0 = time.perf_counter()
         try:
-            out = self._infer(sts)
+            if wd is not None:
+                wd.arm(s)
+            try:
+                out = self._infer(sts)
+            except (TileFailure, IntegrityError) as e:
+                # recoverable fault taxonomy (DESIGN.md §11): one re-run
+                # on healthy resources — the dead group is excluded by
+                # the partition failover, a corrupted transfer re-issues
+                # from its retained source
+                kind = "integrity_error" if isinstance(e, IntegrityError) \
+                    else "tile_failure"
+                self.platform.post(kind, {"stage": "dispatch",
+                                          "error": str(e)})
+                if wd is not None:
+                    wd.arm(s)           # fresh budget for the re-run
+                out = self._infer(sts)
         except Exception as e:                  # report, keep draining
-            r.send(proto.Msg.ERROR,
-                   proto.pack_json({"error": str(e)}),
-                   rid=srid, version=sver)
-        else:
-            dt = time.perf_counter() - t0
-            self.platform.telemetry.record_latency(dt)
-            self.scheduler.observe_step_latency(dt)
-            r.send(proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
-                   rid=srid, version=sver)
+            r.send_final(s, proto.Msg.ERROR,
+                         proto.pack_json({"error": str(e)}),
+                         rid=srid, version=sver)
+            return
+        finally:
+            if wd is not None:
+                wd.disarm()
+            self._executing = None
+        dt = time.perf_counter() - t0
+        self.platform.telemetry.record_latency(dt)
+        self.scheduler.observe_step_latency(dt)
+        r.send_final(s, proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
+                     rid=srid, version=sver)
 
     def _dispatch_batch(self, run: list) -> None:
         """One coalesced dispatch for a same-signature request run.
@@ -437,12 +524,16 @@ class InferenceServer:
         if self._bound is None:
             for s in run:                       # mirror _infer's refusal
                 r, srid, sver, _ = s.payload
-                r.send(proto.Msg.ERROR,
-                       proto.pack_json({"error": "not provisioned"}),
-                       rid=srid, version=sver)
+                r.send_final(s, proto.Msg.ERROR,
+                             proto.pack_json({"error": "not provisioned"}),
+                             rid=srid, version=sver)
             return
+        wd = self._loop.watchdog
+        self._executing = run
         t0 = time.perf_counter()
         try:
+            if wd is not None:
+                wd.arm(run)
             outs = self.executor.run_batched(
                 self._bound, [s.payload[3] for s in run],
                 rimfs=self.platform.rimfs)
@@ -457,6 +548,10 @@ class InferenceServer:
             for s in run:
                 self._dispatch_single(s)
             return
+        finally:
+            if wd is not None:
+                wd.disarm()
+            self._executing = None
         amortized = (time.perf_counter() - t0) / len(run)
         st = self.batched_stats
         st["dispatches"] += 1
@@ -466,8 +561,8 @@ class InferenceServer:
             r, srid, sver, _ = s.payload
             self.platform.telemetry.record_latency(amortized)
             self.scheduler.observe_step_latency(amortized)
-            r.send(proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
-                   rid=srid, version=sver)
+            r.send_final(s, proto.Msg.INFER_RESPONSE,
+                         proto.pack_tensors(out), rid=srid, version=sver)
 
     def _infer_lm(self, work: _Work) -> None:
         """LM service program: continuous batching via the engine; the
@@ -520,6 +615,21 @@ class InferenceServer:
                             rid=work.frame.request_id,
                             flags=proto.F_DRAINING,
                             version=work.frame.version)
+            return
+        # a dropped KICK may represent a dispatch the wedged worker is
+        # still executing (close(timeout=) racing a watchdog preemption):
+        # refuse the in-flight request explicitly. send_final makes the
+        # race with a late-completing handler safe — exactly one of the
+        # refusal and the real reply reaches the wire.
+        ex = self._executing
+        if ex is None:
+            return
+        payload = proto.pack_json({"error": "preempted: dispatcher "
+                                   "closing"})
+        for s in (ex if isinstance(ex, list) else [ex]):
+            r, srid, sver, _ = s.payload
+            r.send_final(s, proto.Msg.ERROR, payload, rid=srid,
+                         flags=proto.F_DRAINING, version=sver)
 
     def run_on_dispatcher(self, fn, timeout: float = 60.0):
         """Execute ``fn`` ON the dispatcher thread and return its result.
@@ -597,6 +707,7 @@ class InferenceServer:
         s["serving"] = {**self._loop.summary(), "shed": shed,
                         "inflight": len(self._inflight),
                         "batched": dict(self.batched_stats)}
+        s["counters"] = self.platform.telemetry.counters()
         if self.engine is not None:
             s["engine"] = self.engine.telemetry.summary(warmup=1)
         return s
@@ -670,11 +781,29 @@ class Client:
             else:
                 proto.send_frame(self.sock, kind, payload)
 
-    def _await(self, rid: int) -> proto.Frame:
+    def _await(self, rid: int,
+               timeout: Optional[float] = None) -> proto.Frame:
         """Block until the reply for ``rid`` arrives. Exactly one thread
         receives at a time; frames for other ids are parked and their
         waiters notified. A receive failure marks the connection dead so
-        every parked waiter errors out instead of waiting forever."""
+        every parked waiter errors out instead of waiting forever.
+
+        ``timeout`` bounds the whole wait: a request id orphaned by a
+        server that never replies raises ``TimeoutError`` instead of
+        parking forever. The receive slot polls the socket with
+        ``select`` slices (``settimeout`` would flip the shared file
+        description and break concurrent senders) so a timed waiter
+        holding the slot still hands it back promptly on expiry."""
+        deadline = None if timeout is None \
+            else time.monotonic() + timeout
+
+        def _expired() -> float:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(
+                    f"no reply for request {rid} within {timeout}s")
+            return remaining
+
         with self._cond:
             while True:
                 if rid in self._parked:
@@ -685,9 +814,15 @@ class Client:
                 if not self._receiving:
                     self._receiving = True
                     break
-                self._cond.wait()
+                self._cond.wait(None if deadline is None
+                                else min(_expired(), 0.1))
         try:
             while True:
+                if deadline is not None:
+                    ready, _, _ = select.select(
+                        [self.sock], [], [], min(_expired(), 0.1))
+                    if not ready:
+                        continue
                 try:
                     f = proto.recv_frame_ex(self.sock,
                                             max_frame=self.max_frame)
@@ -748,16 +883,19 @@ class Client:
                    proto.pack_tensors({**tensors, **meta}), rid=rid)
         return rid
 
-    def result(self, rid: int) -> dict:
-        """Collect the response for a pipelined request id (any order)."""
-        f = self._await(rid)
+    def result(self, rid: int, timeout: Optional[float] = None) -> dict:
+        """Collect the response for a pipelined request id (any order).
+        ``timeout`` raises ``TimeoutError`` for an orphaned id (e.g. a
+        dead server that will never answer) instead of parking forever."""
+        f = self._await(rid, timeout=timeout)
         if f.kind == proto.Msg.ERROR:
             self._raise_error(f)
         return proto.unpack_tensors(f.payload)
 
     def infer(self, deadline_ms: Optional[float] = None,
               priority: Optional[int] = None,
-              max_new: Optional[int] = None, **tensors) -> dict:
+              max_new: Optional[int] = None,
+              timeout: Optional[float] = None, **tensors) -> dict:
         """One-shot inference; with ``retries`` set, bounded re-send on
         backpressure refusals (a refused request was never executed, so
         re-sending cannot double-run it)."""
@@ -766,7 +904,7 @@ class Client:
             try:
                 return self.result(self.infer_async(
                     deadline_ms=deadline_ms, priority=priority,
-                    max_new=max_new, **tensors))
+                    max_new=max_new, **tensors), timeout=timeout)
             except (ServerBusy, RequestShed) as e:
                 kind = "busy" if isinstance(e, ServerBusy) else "shed"
                 self.retry_stats[kind] += 1

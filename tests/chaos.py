@@ -23,6 +23,7 @@ any failed invariant.
 from __future__ import annotations
 
 import argparse
+import json
 import socket
 import sys
 import threading
@@ -33,6 +34,7 @@ import numpy as np
 from repro.core import rctc, rhal, rimfs
 from repro.core.executor import Executor
 from repro.core.fleet import FleetConfig, FleetController
+from repro.core.integrity import IntegrityError
 from repro.core import rbl
 from repro.serving import protocol as proto
 from repro.serving.server import Client, InferenceServer
@@ -51,6 +53,58 @@ def delay_dma(mesh, gid: int, seconds: float):
 
     driver.dma_async = slow
     return lambda: setattr(driver, "dma_async", orig)
+
+
+def corrupt_dma_payload(mesh, gid: int, count: int = 3):
+    """Fault: flip one bit in the device-side payload of the next
+    ``count`` CRC-stamped transfers landing on one group (a flaky
+    interconnect lane). The ticket's CRC and retained source were
+    stamped from the CLEAN bytes inside the real issue call, so
+    redemption detects the corruption and the driver's bounded in-place
+    retry re-issues from the source — through ``jax.device_put``
+    directly, bypassing this wrapper, so a retry is never re-corrupted.
+    Returns ``(undo, state)``."""
+    import jax
+    import jax.numpy as jnp
+    driver = mesh.group(gid).driver
+    orig = driver.dma_async
+    state = {"corrupted": 0}
+
+    def corrupting(host_buf, direction, prefetched=False):
+        ticket = orig(host_buf, direction, prefetched=prefetched)
+        if state["corrupted"] < count and ticket.crc is not None:
+            bad = np.array(np.asarray(ticket.buf))      # writable copy:
+            bad.reshape(-1).view(np.uint8)[0] ^= 0x01   # producer's buffer
+            ticket.buf = jax.device_put(jnp.asarray(bad))  # stays clean
+            state["corrupted"] += 1
+        return ticket
+
+    driver.dma_async = corrupting
+    return (lambda: setattr(driver, "dma_async", orig)), state
+
+
+def hang_until_killed(mesh, gid: int):
+    """Fault: the next DMA redemption on one group blocks indefinitely —
+    a wedged interconnect endpoint that no software timeout below the
+    runtime can break. The block releases only when the group is killed
+    (the watchdog preemption's hardware-reset analogue); the original
+    guarded slot then raises ``TileFailure`` and the stage fails over.
+    Returns ``(undo, state)``."""
+    group = mesh.group(gid)
+    driver = group.driver
+    orig = driver.dma_wait
+    state = {"hung": False, "released": False}
+
+    def hang(ticket):
+        if not state["hung"]:
+            state["hung"] = True
+            while group.alive:
+                time.sleep(0.005)
+            state["released"] = True
+        return orig(ticket)
+
+    driver.dma_wait = hang
+    return (lambda: setattr(driver, "dma_wait", orig)), state
 
 
 def inject_corrupt_frame(address) -> bool:
@@ -209,10 +263,47 @@ def run_chaos(groups: int = 2, seed: int = 7, requests: int = 90,
         report["timings"]["kill_to_heal"] = time.perf_counter() - t_kill
         log("healed")
 
+        wait_frac(0.33)
+        log("journaled install: fault at every mid-write point, fsck "
+            "recovers")
+        store = rimfs.ImageStore(image)
+        repacked = rimfs.pack(files)
+        jres = {"rolled_back": 0, "replayed": 0}
+        for phase in ("after_intent", "after_stage", "after_commit"):
+            try:
+                store.install(repacked, fail_at=phase)
+            except IntegrityError:
+                pass                    # the injected "crash"
+            fr = store.fsck(strict=True)
+            jres["rolled_back"] += len(fr["rolled_back"])
+            jres["replayed"] += len(fr["replayed"])
+        jres["image_ok"] = bool(store.fsck(strict=True)["image"]["ok"])
+        report["journal"] = jres
+        report["faults"].append("journal_fault")
+        # the replayed install IS the repacked image: the good swap below
+        # serves journal-recovered bytes, closing the recovery loop
+        recovered_image = store.image()
+
+        wait_frac(0.36)
+        tgt = 1 if server.mesh.n_groups > 1 else 0
+        log(f"corrupt DMA payloads toward group {tgt}")
+        undo_corrupt, cstate = corrupt_dma_payload(server.mesh, tgt,
+                                                   count=3)
+        for _ in range(200):            # traffic drives the transfers
+            if cstate["corrupted"] >= 3:
+                break
+            time.sleep(0.03)
+        undo_corrupt()
+        drv = server.mesh.group(tgt).driver
+        report["dma_crc"] = {k: drv.stats.get(k, 0) for k in
+                             ("dma_crc_checked", "dma_crc_mismatch",
+                              "dma_retry", "dma_retry_recovered")}
+        report["faults"].append("dma_payload_corruption")
+
         wait_frac(0.40)
-        log("hot swap: identical weights, repacked image")
+        log("hot swap: identical weights, journal-recovered image")
         good = timed("swap_good", lambda: fleet.swap_weights(
-            rimfs.pack(files), label="repack"))
+            recovered_image, label="repack"))
         report["good_swap"] = good
         report["faults"].append("swap_good")
         for _ in range(cfg.probation_ticks + 1):   # probation -> finalize
@@ -226,6 +317,59 @@ def run_chaos(groups: int = 2, seed: int = 7, requests: int = 90,
             rimfs.pack(bad_files), label="bad"))
         report["bad_swap"] = bad
         report["faults"].append("swap_bad")
+
+        wait_frac(0.62)
+        tgt = 1 if server.mesh.n_groups > 1 else 0
+        log(f"hang DMA redemption on group {tgt} "
+            f"(watchdog must preempt)")
+        undo_hang, hstate = hang_until_killed(server.mesh, tgt)
+        # a dedicated probe drives one dispatch through the mesh so the
+        # wedge is guaranteed to trigger even if the client traffic has
+        # already drained (short smoke schedules) — the probe itself
+        # must come back bit-identical after the preempt + failover
+        probe: dict = {}
+
+        def probe_request() -> None:
+            pc = Client(addr, retries=retries, backoff=0.02,
+                        retry_seed=seed * 1000 + 999)
+            try:
+                probe["out"] = pc.infer(input=pool[0])
+            except Exception as e:
+                probe["error"] = repr(e)
+            finally:
+                pc.close()
+
+        pt = threading.Thread(target=probe_request, daemon=True)
+        pt.start()
+        t_hang = time.perf_counter()
+        for _ in range(800):            # watchdog budget + failover
+            if hstate["released"]:
+                break
+            fleet.tick()                # heal restores full capacity
+            time.sleep(0.02)
+        undo_hang()
+        pt.join(timeout=30)
+        if "out" in probe:
+            ident = set(probe["out"]) == set(refs[0]) and all(
+                np.array_equal(probe["out"][k], refs[0][k])
+                for k in refs[0])
+            if not ident:
+                with lock:
+                    failures.append("hang probe: output not "
+                                    "bit-identical after preemption")
+        else:
+            with lock:
+                failures.append(f"hang probe: "
+                                f"{probe.get('error', 'no reply')}")
+        report["timings"]["hang_to_preempt"] = \
+            time.perf_counter() - t_hang
+        report["watchdog"] = {
+            "released": hstate["released"],
+            "preemptions": server.platform.telemetry.counter(
+                "watchdog_preemptions"),
+        }
+        report["faults"].append("hung_dispatch")
+        log("preempted + failed over")
 
         wait_frac(0.68)
         log(f"DMA delay {dma_delay_s}s on group 0")
@@ -274,6 +418,7 @@ def run_chaos(groups: int = 2, seed: int = 7, requests: int = 90,
         "n_groups_final": server.mesh.n_groups,
         "events": [k for k, _ in fleet.events],
         "fleet": fleet.summary(),
+        "counters": server.platform.telemetry.counters(),
     })
     return report
 
@@ -303,6 +448,26 @@ def check_report(report: dict) -> list:
     if report["p99_s"] > report["p99_bound_s"]:
         bad.append(f"p99 {report['p99_s']:.3f}s past bound "
                    f"{report['p99_bound_s']:.3f}s")
+    faults = report.get("faults", ())
+    if "dma_payload_corruption" in faults:
+        dc = report.get("dma_crc", {})
+        if not dc.get("dma_retry_recovered"):
+            bad.append("corrupted DMA payloads never recovered by the "
+                       f"in-place retry: {dc}")
+    if "hung_dispatch" in faults:
+        wd = report.get("watchdog", {})
+        if not wd.get("released"):
+            bad.append("hung dispatch was never preempted (watchdog "
+                       "kill did not release the wedge)")
+        if not wd.get("preemptions"):
+            bad.append("watchdog_preemptions counter never incremented")
+    j = report.get("journal")
+    if j is not None:
+        if j.get("replayed") != 1 or j.get("rolled_back") != 2:
+            bad.append(f"journal recovery wrong shape: {j} "
+                       "(want 1 replay, 2 rollbacks)")
+        if not j.get("image_ok"):
+            bad.append("post-recovery image failed fsck")
     return bad
 
 
@@ -314,6 +479,9 @@ def main(argv=None) -> int:
     ap.add_argument("--clients", type=int, default=3)
     ap.add_argument("--scale-peak", type=int, default=8)
     ap.add_argument("--p99-bound-s", type=float, default=30.0)
+    ap.add_argument("--log", type=str, default=None,
+                    help="write the full chaos event report as JSON "
+                         "(CI uploads it as an artifact on failure)")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
     report = run_chaos(groups=args.groups, seed=args.seed,
@@ -321,6 +489,11 @@ def main(argv=None) -> int:
                        scale_peak=args.scale_peak,
                        p99_bound_s=args.p99_bound_s, verbose=args.verbose)
     violations = check_report(report)
+    if args.log:
+        with open(args.log, "w") as f:
+            json.dump({"report": report, "violations": violations}, f,
+                      indent=2, default=lambda o: o.item()
+                      if hasattr(o, "item") else str(o))
     print(f"chaos: sent={report['sent']} ok={report['ok']} "
           f"failed={report['failed']} mismatches={report['mismatches']} "
           f"p50={report['p50_s'] * 1e3:.1f}ms "

@@ -1,0 +1,382 @@
+"""Integrity plane (ISSUE 7 tentpole): checksummed DMA with bounded
+retry, arena quarantine + CRC re-validation, journaled RIMFS installs
+with fsck replay/rollback, verify-on-read, and the execution watchdog."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import rbl, rctc, rhal, rimfs
+from repro.core.integrity import IntegrityError, payload_crc
+from repro.core.rtpm import Platform, ServiceLoop, Watchdog
+
+
+def _corrupt_ticket(ticket):
+    """Bit-flip the ticket's device payload (leaves crc/src clean —
+    exactly what a flaky interconnect lane does post-issue)."""
+    import jax
+    bad = np.array(np.asarray(ticket.buf))
+    bad.reshape(-1).view(np.uint8)[0] ^= 0x01
+    ticket.buf = jax.device_put(bad)
+
+
+# ------------------------------------------------------------ DMA CRC
+def test_dma_ticket_stamped_and_verified(rng):
+    drv = rhal.make_eager_driver()
+    host = rng.randn(64).astype(np.float32)
+    t = drv.dma_async(host, "h2d")
+    assert t.crc == payload_crc(host)        # stamped at issue
+    out = drv.dma_wait(t)
+    np.testing.assert_array_equal(np.asarray(out), host)
+    assert drv.stats["dma_crc_checked"] == 1
+    assert drv.stats.get("dma_crc_mismatch", 0) == 0
+
+
+def test_dma_corruption_recovered_by_retry(rng):
+    drv = rhal.make_eager_driver()
+    host = rng.randn(32, 32).astype(np.float32)
+    t = drv.dma_async(host, "h2d")
+    _corrupt_ticket(t)
+    out = drv.dma_wait(t)                    # retry re-issues from src
+    np.testing.assert_array_equal(np.asarray(out), host)  # bit-identical
+    assert drv.stats["dma_crc_mismatch"] == 1
+    assert drv.stats["dma_retry"] == 1
+    assert drv.stats["dma_retry_recovered"] == 1
+    assert t.retries == 1
+
+
+def test_dma_retries_exhausted_raises_integrity_error(rng):
+    drv = rhal.make_eager_driver()
+    drv.integrity.dma_retries = 0            # no budget: escalate at once
+    host = rng.randn(16).astype(np.float32)
+    t = drv.dma_async(host, "h2d")
+    _corrupt_ticket(t)
+    with pytest.raises(IntegrityError, match="CRC mismatch"):
+        drv.dma_wait(t)
+    assert drv.stats["dma_crc_mismatch"] == 1
+    assert drv.stats.get("dma_retry", 0) == 0
+
+
+def test_dma_crc_disabled_skips_stamp_and_check(rng):
+    drv = rhal.make_eager_driver()
+    drv.integrity.enabled = False            # the benchmarked off-switch
+    t = drv.dma_async(rng.randn(8).astype(np.float32), "h2d")
+    assert t.crc is None
+    drv.dma_wait(t)
+    assert drv.stats.get("dma_crc_checked", 0) == 0
+
+
+def test_dma_d2h_never_stamped(rng):
+    """d2h verification would force a host sync at issue and kill the
+    split-phase overlap; the host side is covered by RIMFS CRCs."""
+    drv = rhal.make_eager_driver()
+    host = rng.randn(8).astype(np.float32)
+    dev = drv.dma_wait(drv.dma_async(host, "h2d"))
+    t = drv.dma_async(dev, "d2h")
+    assert t.crc is None
+    np.testing.assert_array_equal(drv.dma_wait(t), host)
+
+
+def test_dma_batch_tickets_stamped(rng):
+    drv = rhal.make_eager_driver()
+    hosts = [rng.randn(16).astype(np.float32) for _ in range(3)]
+    tickets = drv.dma_async_batch(hosts, "h2d")
+    for t, h in zip(tickets, hosts):
+        assert t.crc == payload_crc(h)
+        np.testing.assert_array_equal(np.asarray(drv.dma_wait(t)), h)
+
+
+# --------------------------------------------- quarantine / revalidation
+def test_kill_quarantines_arena_and_revive_revalidates(rng):
+    mesh = rhal.TileMesh(2)
+    files = {"w": rng.randn(8, 8).astype(np.float32)}
+    fs = rimfs.mount(rimfs.pack(files))
+    fs.resident(mesh.group(0).driver)        # pin weights on group 0
+    mesh.kill(0)
+    assert mesh.group(0).driver.arena.poisoned
+    with pytest.raises(rhal.TileFailure, match="quarantined"):
+        mesh.group(0).driver.arena.alloc(128)
+    mesh.revive(0, rimfs=fs)                 # CRC-clean: quarantine lifts
+    assert not mesh.group(0).driver.arena.poisoned
+    assert mesh.alive(0)
+    assert mesh.group(0).driver.arena.alloc(128) >= 0
+
+
+def test_revive_rejects_corrupted_residency(rng):
+    mesh = rhal.TileMesh(1)
+    files = {"w": rng.randn(8, 8).astype(np.float32)}
+    fs = rimfs.mount(rimfs.pack(files))
+    ri = fs.resident(mesh.group(0).driver)
+    mesh.kill(0)
+    import jax
+    bad = np.array(np.asarray(ri.buffer("w")))
+    bad.reshape(-1).view(np.uint8)[3] ^= 0x40
+    ri._bufs["w"] = jax.device_put(bad)      # half-written weight copy
+    with pytest.raises(IntegrityError, match="re-validation"):
+        mesh.revive(0, rimfs=fs)
+    assert mesh.group(0).driver.arena.poisoned   # still quarantined
+
+
+# -------------------------------------------------------- verify-on-read
+def test_read_verifies_file_crc(rng):
+    img = bytearray(rimfs.pack({"w": rng.randn(32).astype(np.float32)}))
+    fs0 = rimfs.mount(bytes(img))
+    off, _ = fs0.address_of("w")
+    img[off + 2] ^= 0x08
+    fs = rimfs.mount(bytes(img))
+    with pytest.raises(rimfs.RIMFSError, match="read"):
+        fs.read("w")
+    fs.read("w", verify=False)               # explicit opt-out still works
+    fs2 = rimfs.RIMFS(bytes(img), verify_reads=False)
+    fs2.read("w")                            # policy-level opt-out
+
+
+def test_read_verification_memoized(rng):
+    fs = rimfs.mount(rimfs.pack({"w": rng.randn(64).astype(np.float32)}))
+    fs.read("w")
+    assert "w" in fs._verified
+    fs.read("w")                             # second read: memo hit
+
+
+def test_rimfs_error_is_integrity_error(rng):
+    assert issubclass(rimfs.RIMFSError, IntegrityError)
+
+
+def test_corrupt_image_rejected_before_bind(rng):
+    """Satellite: a poisoned weight image must be rejected at provision
+    (bring-up fsck), long before any buffer binds or uploads."""
+    prog = rctc.compile_gemm_chain(2, 8)
+    files = rctc.gemm_chain_weights(2, 8)
+    img = bytearray(rimfs.pack(files))
+    fs0 = rimfs.mount(bytes(img))
+    off, _ = fs0.address_of(sorted(files)[0])
+    img[off + 1] ^= 0x20
+    plat = Platform()
+    with pytest.raises(rimfs.RIMFSError):
+        plat.provision(image=bytes(img), program_bytes=prog.encode())
+    # and even with bring-up verification off, the read-side CRC check
+    # refuses the poisoned file before it can bind
+    plat2 = Platform()
+    plat2.provision(image=bytes(img), program_bytes=prog.encode(),
+                    verify=False)
+    with pytest.raises(rimfs.RIMFSError):
+        plat2.bind()
+
+
+def test_fsck_reports_and_raises(rng):
+    img = bytearray(rimfs.pack({"a": rng.randn(16).astype(np.float32),
+                                "b": rng.randn(16).astype(np.float32)}))
+    fs = rimfs.mount(bytes(img))
+    rep = fs.fsck(strict=True)
+    assert rep["ok"] and rep["files"] == 2 and not rep["bad_files"]
+    off, _ = fs.address_of("a")
+    img[off] ^= 0x01
+    bad_fs = rimfs.RIMFS(bytes(img), verify_reads=False)
+    rep = bad_fs.fsck(strict=False)
+    assert not rep["ok"] and rep["bad_files"] == ["a"]
+    with pytest.raises(rimfs.RIMFSError, match="CRC"):
+        bad_fs.fsck(strict=True)             # trailer check trips first
+
+
+# ------------------------------------------------------ journaled installs
+def test_journaled_install_fault_matrix(rng):
+    """A fault at every mid-write point leaves the visible image either
+    wholly old or wholly new; fsck rolls back uncommitted staging and
+    replays committed flips."""
+    img_a = rimfs.pack({"w": rng.randn(8).astype(np.float32)})
+    img_b = rimfs.pack({"w": rng.randn(8).astype(np.float32)})
+    store = rimfs.ImageStore(img_a)
+    assert store.image() == img_a
+
+    for phase, visible_after in (("after_intent", img_a),
+                                 ("after_stage", img_a),
+                                 ("after_commit", img_b)):
+        with pytest.raises(IntegrityError, match="injected"):
+            store.install(img_b, fail_at=phase)
+        assert store.image() in (img_a, img_b)   # never a mixture
+        rep = store.fsck(strict=True)
+        assert store.image() == visible_after
+        assert rep["image"]["ok"]
+        if phase == "after_commit":
+            assert len(rep["replayed"]) == 1
+        else:
+            assert len(rep["rolled_back"]) == 1
+        store._image = bytes(img_a)              # reset for next phase
+    assert not store.journal.pending()           # journal fully resolved
+
+
+def test_journaled_install_survives_process_crash(tmp_path, rng):
+    """File-backed durability: the 'crash' is a NEW ImageStore over the
+    same path — recovery must come entirely from the journal + stage
+    files on disk, not from in-memory state."""
+    img_a = rimfs.pack({"w": rng.randn(8).astype(np.float32)})
+    img_b = rimfs.pack({"w": rng.randn(8).astype(np.float32)})
+    path = tmp_path / "store.rimfs"
+    store = rimfs.ImageStore(img_a, path=path)
+
+    with pytest.raises(IntegrityError):          # crash after commit mark
+        store.install(img_b, fail_at="after_commit")
+    survivor = rimfs.ImageStore(path=path)       # fresh process
+    assert survivor.image() == img_a             # flip never landed
+    rep = survivor.fsck(strict=True)
+    assert len(rep["replayed"]) == 1
+    assert survivor.image() == img_b             # redo from staged bytes
+    assert path.read_bytes() == img_b
+
+    with pytest.raises(IntegrityError):          # crash before commit
+        survivor.install(img_a, fail_at="after_stage")
+    survivor2 = rimfs.ImageStore(path=path)
+    rep = survivor2.fsck(strict=True)
+    assert len(rep["rolled_back"]) == 1          # undo: stays on img_b
+    assert survivor2.image() == img_b
+    assert not survivor2.journal.pending()
+
+
+def test_image_store_plain_install_roundtrip(rng):
+    img = rimfs.pack({"w": rng.randn(4).astype(np.float32)})
+    store = rimfs.ImageStore()
+    with pytest.raises(rimfs.RIMFSError, match="empty"):
+        store.mount()
+    store.install(img)
+    fs = store.mount()
+    assert fs.files() == ["w"]
+    assert store.fsck(strict=True)["image"]["ok"]
+
+
+# --------------------------------------------------------------- watchdog
+def test_watchdog_fires_once_per_dispatch():
+    fired = []
+    wd = Watchdog(budget_fn=lambda item: 0.05, on_hang=fired.append,
+                  poll=0.01)
+    try:
+        wd.arm("x")
+        time.sleep(0.3)                      # budget blown several times
+        assert fired == ["x"]                # ...but exactly one fire
+        wd.disarm()
+        wd.arm("y")
+        wd.disarm()                          # finished in time
+        time.sleep(0.1)
+        assert fired == ["x"]
+        assert wd.stats["preemptions"] == 1
+    finally:
+        wd.close()
+
+
+def test_watchdog_boot_grace_none_budget():
+    fired = []
+    wd = Watchdog(budget_fn=lambda item: None, on_hang=fired.append,
+                  poll=0.01)
+    try:
+        wd.arm("unwatched")
+        time.sleep(0.1)
+        assert fired == []                   # no EWMA evidence: no deadline
+        assert wd.stats["armed"] == 0
+    finally:
+        wd.close()
+
+
+def test_service_loop_watchdog_preempts_hung_dispatch():
+    """The loop-level integration: a hung handler is preempted via
+    on_hang, which breaks the wedge (here: a gate, standing in for the
+    TileFailure path) — the worker survives and keeps serving."""
+    plat = Platform()
+    gate = threading.Event()
+    preempted = []
+    handled = []
+
+    def handler(item):
+        if item == "hang":
+            gate.wait(10)                    # wedged until preemption
+        handled.append(item)
+
+    loop = ServiceLoop(plat, handler, max_queue=8, poll=0.01,
+                       watchdog_budget=lambda it: 0.1,
+                       on_hang=lambda it: (preempted.append(it),
+                                           gate.set()),
+                       watchdog_poll=0.01)
+    try:
+        assert loop.submit("hang")
+        assert loop.submit("next")
+        deadline = time.monotonic() + 5
+        while len(handled) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert preempted == ["hang"]         # watchdog broke the wedge
+        assert handled == ["hang", "next"]   # worker lived on
+    finally:
+        loop.close(drain=False, timeout=2)
+
+
+def test_close_racing_watchdog_preemption_drops_once():
+    """Satellite: ``close(timeout=)`` racing a watchdog preemption —
+    the preempted in-flight dispatch lands in ``on_drop`` exactly once,
+    and the worker exits once the preemption unwedges it."""
+    plat = Platform()
+    gate = threading.Event()
+    started = threading.Event()
+    dropped, preempted = [], []
+
+    def handler(item):
+        started.set()
+        gate.wait(10)                        # wedged until preempted
+
+    loop = ServiceLoop(plat, handler, max_queue=8, poll=0.01,
+                       on_drop=dropped.append,
+                       watchdog_budget=lambda it: 0.5,
+                       on_hang=lambda it: (preempted.append(it),
+                                           gate.set()),
+                       watchdog_poll=0.01)
+    assert loop.submit("victim")
+    assert started.wait(5)
+    # close with a timeout shorter than the watchdog budget: the worker
+    # is wedged, so close hands the in-flight item to on_drop and exits
+    loop.close(drain=True, timeout=0.1)
+    assert dropped == ["victim"]             # exactly once, no dupes
+    # the preemption then fires and unwedges the worker -> clean exit
+    loop._thread.join(timeout=5)
+    assert not loop.alive()
+    assert preempted == ["victim"]
+    assert dropped == ["victim"]             # drop not repeated on exit
+
+
+# -------------------------------------------------------- counters plumb
+def test_platform_counts_integrity_events():
+    plat = Platform()
+    plat.post("integrity_error", {"n": 2})
+    plat.post("watchdog_preempt", {})
+    plat.post("dma_retry", {"n": 3})
+    assert plat.telemetry.counter("integrity_errors") == 2
+    assert plat.telemetry.counter("watchdog_preemptions") == 1
+    assert plat.telemetry.counter("dma_retries") == 3
+    assert plat.telemetry.counters()["integrity_errors"] == 2
+
+
+def test_partitioned_corruption_recovers_bit_identical(rng):
+    """End-to-end through the partitioned path: corrupt a cut-edge
+    stream payload, the redeeming stage's driver retries in place, the
+    answer stays bit-identical and the platform counters move."""
+    import chaos
+    depth, n = 4, 16
+    prog = rctc.compile_gemm_chain(depth, n)
+    files = rctc.gemm_chain_weights(depth, n)
+    fs = rimfs.mount(rimfs.pack(files))
+    x = rng.randn(n, n).astype(np.float32)
+    from repro.core.executor import Executor
+    ref = Executor().run(rbl.bind(prog, rimfs=fs, inputs={"input": x}))
+
+    plat = Platform()
+    mesh = rhal.TileMesh(2)
+    undo, state = chaos.corrupt_dma_payload(mesh, 1, count=2)
+    try:
+        bound = rbl.bind(prog, rimfs=fs, inputs={"input": x})
+        out = plat.run_partitioned(bound, mesh=mesh, rimfs=fs)
+    finally:
+        undo()
+    assert state["corrupted"] >= 1
+    for k in ref:
+        np.testing.assert_array_equal(np.asarray(ref[k]),
+                                      np.asarray(out[k]))
+    drv = mesh.group(1).driver
+    assert drv.stats["dma_retry_recovered"] == state["corrupted"]
+    assert plat.telemetry.counter("dma_retries") >= 1
+    assert plat.telemetry.counter("integrity_errors") >= 1

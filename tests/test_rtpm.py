@@ -364,10 +364,13 @@ def test_heartbeat_ewma_straggler_verdict():
 
 
 def test_service_loop_close_wedged_handler_times_out_and_hands_back():
-    """Satellite (ISSUE 6): close(drain=True, timeout=...) against a
-    wedged handler honours the timeout, hands every still-queued item to
-    on_drop, and leaves the heartbeat monitor to report the dispatcher
-    dead — no indefinite hang, no silently vanished work."""
+    """Satellite (ISSUE 6, extended by ISSUE 7): close(drain=True,
+    timeout=...) against a wedged handler honours the timeout, hands
+    every still-queued item AND the wedged in-flight item to on_drop
+    (its submitter must be refused, not parked forever; downstream
+    reply-once guards make a late handler completion harmless), and
+    leaves the heartbeat monitor to report the dispatcher dead — no
+    indefinite hang, no silently vanished work."""
     t = {"now": 0.0}
     plat = Platform(deadline=5.0, clock=lambda: t["now"])
     gate = threading.Event()
@@ -390,7 +393,8 @@ def test_service_loop_close_wedged_handler_times_out_and_hands_back():
         elapsed = time.monotonic() - w0
         assert elapsed < 3.0                   # timeout honoured, no hang
         assert loop.alive()                    # worker is still wedged
-        assert dropped == ["b", "c"]           # pending work handed back
+        # pending work handed back, then the wedged in-flight item too
+        assert dropped == ["b", "c", "a"]
         t["now"] = 10.0                        # silence past the deadline
         v = plat.heartbeats.check()
         assert "dispatcher" in v["failed"]     # monitor calls it dead

@@ -671,3 +671,66 @@ def test_mixed_lm_and_rcb_requests_one_server(resnet_setup, rng):
     finally:
         client.close()
         server.stop()
+
+
+# ----------------------------------------------------- integrity (ISSUE 7)
+def test_client_result_timeout_on_never_replying_server():
+    """Satellite: a request id orphaned by a server that never replies
+    raises TimeoutError instead of parking the waiter forever."""
+    lst = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lst.bind(("127.0.0.1", 0))
+    lst.listen(1)
+    client = Client(lst.getsockname())
+    conn, _ = lst.accept()                  # accept, then go silent
+    try:
+        rid = client.infer_async(input=np.zeros(4, np.float32))
+        t0 = time.monotonic()
+        with pytest.raises(TimeoutError, match="no reply"):
+            client.result(rid, timeout=0.4)
+        assert time.monotonic() - t0 < 5.0  # bounded, not parked
+        # the receive slot was handed back: a second waiter can still
+        # time out too (a wedged slot would hang it forever)
+        with pytest.raises(TimeoutError):
+            client.result(rid + 1, timeout=0.2)
+        # and infer(timeout=) surfaces the same thing end-to-end
+        with pytest.raises(TimeoutError):
+            client.infer(input=np.zeros(4, np.float32), timeout=0.2)
+    finally:
+        client.close()
+        conn.close()
+        lst.close()
+
+
+def test_watchdog_preempts_hung_dispatch_end_to_end(rng):
+    """ISSUE 7 tentpole: a dispatch wedged in a DMA redemption blows its
+    EWMA-derived deadline, the watchdog kills the hung tile group
+    (quarantining its arena), the stage fails over, and the client gets
+    the bit-identical answer — a hang becomes bounded latency."""
+    import chaos
+    from repro.core import rhal, rimfs as rimfs_mod
+    depth, n = 4, 16
+    prog = rctc.compile_gemm_chain(depth, n)
+    image = rimfs_mod.pack(rctc.gemm_chain_weights(depth, n))
+    server = InferenceServer(mesh=rhal.TileMesh(2), watchdog_floor=0.3,
+                             watchdog_slack=8.0, watchdog_poll=0.01)
+    addr = server.start()
+    client = Client(addr)
+    try:
+        client.provision(image, prog.encode())
+        x = rng.randn(n, n).astype(np.float32)
+        ref = client.infer(input=x)          # warms the scheduler EWMA
+        undo, state = chaos.hang_until_killed(server.mesh, 1)
+        try:
+            out = client.infer(input=x, timeout=30)
+        finally:
+            undo()
+        assert state["released"]             # the kill broke the wedge
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], out[k])
+        assert server.platform.telemetry.counter(
+            "watchdog_preemptions") >= 1
+        assert not server.mesh.alive(1)      # hung group killed...
+        assert server.mesh.group(1).driver.arena.poisoned   # ...poisoned
+    finally:
+        client.close()
+        server.stop()
