@@ -89,6 +89,32 @@ def check_integrity_gates(new: dict) -> int:
     return warned
 
 
+def check_lm_decode_gates(new: dict) -> int:
+    """Warn-only gates over the lm_decode/* rows (ISSUE 8): every
+    speedup row must stay bit-identical to the dense engine (greedy),
+    and the gate cells (batch 8, occupancy >= 50%) must hold the >= 2x
+    paged-vs-dense throughput floor. Informational, never fails the
+    build."""
+    warned = 0
+
+    def warn(name: str, msg: str) -> None:
+        nonlocal warned
+        warned += 1
+        print(f"::warning title=lm_decode gate::{name}: {msg}")
+
+    for name, row in sorted(new.items()):
+        if not name.startswith("lm_decode/speedup_"):
+            continue
+        d = row.get("derived", "")
+        if "bit_identical=True" not in d:
+            warn(name, "paged decode not bit-identical to dense (greedy)")
+        m = re.search(r"paged_vs_dense=([\d.]+)x", d)
+        if "GATE" in d and m and float(m.group(1)) < 2.0:
+            warn(name, f"paged/dense throughput {m.group(1)}x "
+                 f"under the 2x gate")
+    return warned
+
+
 def load(path: str) -> dict:
     try:
         with open(path) as f:
@@ -105,12 +131,24 @@ def main(argv=None) -> int:
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="relative us_per_call increase that counts as "
                          "a regression (default 0.25 = +25%%)")
+    ap.add_argument("--only", default=None, metavar="PREFIX",
+                    help="restrict the diff (and gate checks) to rows "
+                         "whose name starts with PREFIX — lets a partial "
+                         "fresh run (e.g. decode-bench-smoke) diff only "
+                         "the rows it produced without the rest of the "
+                         "baseline showing up as removed")
     args = ap.parse_args(argv)
     old, new = load(args.baseline), load(args.fresh)
     if not old or not new:
         return 0
+    if args.only:
+        # partial-run semantics: a filtered fresh run (smoke sweeps emit
+        # a subset of the full grid) diffs only the rows it produced
+        new = {k: v for k, v in new.items() if k.startswith(args.only)}
+        old = {k: v for k, v in old.items() if k in new}
     fleet_warnings = check_fleet_gates(new)
     integrity_warnings = check_integrity_gates(new)
+    lm_decode_warnings = check_lm_decode_gates(new)
 
     regressed = improved = 0
     for name in sorted(set(old) & set(new)):
@@ -134,7 +172,8 @@ def main(argv=None) -> int:
     print(f"bench-compare: {regressed} regressed, {improved} improved, "
           f"{len(set(old) & set(new))} compared, "
           f"{fleet_warnings} fleet-gate warnings, "
-          f"{integrity_warnings} integrity-gate warnings "
+          f"{integrity_warnings} integrity-gate warnings, "
+          f"{lm_decode_warnings} lm_decode-gate warnings "
           f"(threshold +{args.threshold:.0%}, warn-only)")
     return 0                             # NEVER fails the build
 

@@ -1,0 +1,159 @@
+"""LM decode microbenchmark (ISSUE 8): dense slot cache vs paged KV.
+
+Sweeps batch x prompt-length x cache-occupancy over the smoke LM config
+and measures sustained decode throughput per engine:
+
+* ``lm_decode/dense_*``   — ``ServingEngine`` (dense (L,B,max_seq) cache,
+  one jitted dispatch + host sampling round-trip per token).
+* ``lm_decode/paged_*``   — ``PagedServingEngine`` (block tables over a
+  shared pool, AOT multi-token decode window with on-device sampling).
+  Occupancy is set by sizing the pool so the steady-state working set
+  (batch x blocks reserved per sequence) is the target fraction of
+  ``num_blocks``; the span bucket makes the gathered block axis track
+  occupancy, so low occupancy is not free speed.
+* ``lm_decode/speedup_*`` — paged/dense tokens-per-sec ratio per cell,
+  with a bit-identity flag (same prompts, greedy). The batch-8,
+  occupancy>=50% cell carries the ISSUE 8 gate: >= 2x.
+
+``us_per_call`` is the mean engine-recorded per-token decode latency;
+``derived`` carries tokens/sec and p50/p99 per-token. Tokens/sec is
+end-to-end over the drained wave (prefill + decode), so the paged path's
+larger prefill dispatch is charged against its window amortization.
+
+Run standalone (rows MERGE into an existing results json):
+  PYTHONPATH=src python -m benchmarks.decode_bench [--smoke] \
+      [--json BENCH_core.json]
+or as part of the full harness: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _pct(xs: list, q: float) -> float:
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def _drain_wave(eng, prompts, max_new: int):
+    """Submit one wave and drain it; returns (tokens_per_s, per-token
+    latency samples, out token lists)."""
+    from repro.serving.engine import Request
+    reqs = [Request(rid=i, prompt=p, max_new=max_new)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.telemetry._lat.clear()          # decode-only per-token samples
+    t0 = time.perf_counter()
+    eng.run_until_drained()
+    wall = time.perf_counter() - t0
+    assert all(r.done and not r.shed for r in reqs), \
+        [(r.rid, r.verdict) for r in reqs if r.shed]
+    decode_tokens = sum(len(r.out_tokens) - 1 for r in reqs)
+    return decode_tokens / wall, list(eng.telemetry._lat), \
+        [r.out_tokens for r in reqs]
+
+
+def run_sweep(emit, quick: bool = False) -> None:
+    """Emit the lm_decode/* rows through the harness ``emit`` hook."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as tf
+    from repro.models.common import init_params
+    from repro.serving.engine import ServingEngine
+    from repro.serving.paged_engine import PagedServingEngine
+
+    cfg = get_config("qwen2-1.5b-smoke")
+    params = init_params(jax.random.PRNGKey(0), tf.model_specs(cfg))
+    rng = np.random.RandomState(0)
+    block_size = 8
+    max_new = 16 if quick else 32
+    batches = (1, 8) if quick else (1, 4, 8)
+    plens = (8,) if quick else (8, 32)
+    occs = (0.5,) if quick else (0.5, 0.9)
+    waves = 1 if quick else 2
+    max_seq = 128
+
+    def lat_str(lats):
+        return (f"p50={_pct(lats, 0.5) * 1e6:.0f}us "
+                f"p99={_pct(lats, 0.99) * 1e6:.0f}us")
+
+    for batch in batches:
+        for plen in plens:
+            prompts = [rng.randint(0, cfg.vocab_size, (plen,))
+                       .astype(np.int32) for _ in range(batch)]
+
+            # dense baseline: one engine per cell (occupancy is a paged
+            # concept — the dense cache is always max_batch x max_seq)
+            dense = ServingEngine(cfg, params, max_batch=batch,
+                                  max_seq=max_seq)
+            _drain_wave(dense, prompts, max_new)             # warm (JIT)
+            d_tps, d_lats, d_toks = max(
+                (_drain_wave(dense, prompts, max_new) for _ in range(waves)),
+                key=lambda r: r[0])
+            emit(f"lm_decode/dense_b{batch}_p{plen}",
+                 np.mean(d_lats) * 1e6,
+                 f"tokens_per_s={d_tps:.1f} {lat_str(d_lats)}; "
+                 f"per-token dispatch + host sampling")
+
+            for occ in occs:
+                # pool sized so the wave's worst-case reservation IS the
+                # target occupancy (ceil: never under-provision a lane)
+                need = batch * -(-(plen + max_new) // block_size)
+                num_blocks = max(need, int(np.ceil(need / occ)))
+                paged = PagedServingEngine(
+                    cfg, params, max_batch=batch, max_seq=max_seq,
+                    block_size=block_size, num_blocks=num_blocks)
+                _drain_wave(paged, prompts, max_new)         # warm (AOT)
+                p_tps, p_lats, p_toks = max(
+                    (_drain_wave(paged, prompts, max_new)
+                     for _ in range(waves)), key=lambda r: r[0])
+                pct = int(round(100 * need / num_blocks))
+                emit(f"lm_decode/paged_b{batch}_p{plen}_occ{pct}",
+                     np.mean(p_lats) * 1e6,
+                     f"tokens_per_s={p_tps:.1f} {lat_str(p_lats)}; "
+                     f"occupancy={need}/{num_blocks} blocks "
+                     f"window<=8 on-device sampling")
+                gate = batch == max(batches) and occ >= 0.5
+                emit(f"lm_decode/speedup_b{batch}_p{plen}_occ{pct}", 0.0,
+                     f"paged_vs_dense={p_tps / d_tps:.2f}x"
+                     + (" (GATE >= 2x)" if gate else "")
+                     + f"; bit_identical={d_toks == p_toks} (greedy)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke profile: minimal sweep")
+    ap.add_argument("--json", default="BENCH_core.json",
+                    help="results json; lm_decode/* rows are MERGED into "
+                         "it (other rows are preserved)")
+    args = ap.parse_args(argv)
+    results: dict = {}
+    try:
+        with open(args.json) as f:
+            results = json.load(f)
+    except (OSError, ValueError):
+        pass
+
+    def emit(name: str, us_per_call: float, derived: str = "") -> None:
+        results[name] = {"us_per_call": round(us_per_call, 2),
+                         "derived": derived}
+        print(f"{name},{us_per_call:.2f},{derived}")
+
+    print("name,us_per_call,derived")
+    run_sweep(emit, quick=args.quick or args.smoke)
+    with open(args.json, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    n = sum(1 for k in results if k.startswith("lm_decode/"))
+    print(f"# {n} lm_decode rows -> {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -990,6 +990,8 @@ def main() -> None:
     table2_resource_utilization()
     table3_resnet_inference(iters=50 if quick else 200)
     serving_concurrency_bench(per_client=3 if quick else 6)
+    from benchmarks.decode_bench import run_sweep as lm_decode_sweep
+    lm_decode_sweep(emit, quick=quick)
     integrity_bench(iters=50 if quick else 200)
     fleet_operations_bench(quick=quick)
     kernel_microbench()

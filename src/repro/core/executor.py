@@ -329,6 +329,21 @@ class Executor:
     _batch_cache: dict = {}
     _BATCH_CACHE_CAP = 64
 
+    @classmethod
+    def aot_cache_get(cls, key):
+        """Look up an AOT-compiled executable in the module-wide CRC-keyed
+        cache. Keys are (program CRC, shape-descriptor tuple) — the paged
+        LM engine keys its prefill/decode executables here so every engine
+        over the same service program shares one executable per shape,
+        under the same capacity bound as the batched-dispatch entries."""
+        return cls._batch_cache.get(key)
+
+    @classmethod
+    def aot_cache_put(cls, key, fn) -> None:
+        while len(cls._batch_cache) >= cls._BATCH_CACHE_CAP:
+            cls._batch_cache.pop(next(iter(cls._batch_cache)))
+        cls._batch_cache[key] = fn
+
     def _batched_callable(self, bound: BoundProgram, bucket: int):
         key = (bound.program.crc(), bucket)
         fn = Executor._batch_cache.get(key)

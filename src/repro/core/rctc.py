@@ -374,3 +374,43 @@ def compile_lm_service(cfg, batch: int, seq_len: int,
     b.emit(Op.POLL, [], ["logits"])
     b.close_block("decode")
     return b.build({"prefill": prefill_fn, "decode": decode_fn})
+
+
+def compile_paged_lm_service(cfg, batch: int, max_seq: int, block_size: int,
+                             num_blocks: int, prefill_fn, decode_fn,
+                             greedy: bool = True,
+                             temperature: float = 1.0) -> RCBProgram:
+    """Paged-KV LM service program (ISSUE 8's prefill/decode
+    disaggregation): the KV pool is a scratch tensor with an explicit
+    block axis (num_blocks + 1 rows — the last is the null block), and
+    both GRAPH_EXEC artifacts take the per-batch int32 block-table tensor
+    as a device input, addressing the pool inside the compiled graphs.
+    The decode artifact samples on device (greedy/temperature baked into
+    the program — and into its CRC, which keys the AOT executable cache)
+    and returns the window's new tokens instead of logits.
+    """
+    b = _Builder(f"lm_paged_{cfg.name}")
+    bps = (max_seq + block_size - 1) // block_size    # table width bound
+    pool_shape = (cfg.num_layers, num_blocks + 1, block_size,
+                  cfg.num_kv_heads, cfg.head_dim)
+    b.tensor("params", (0,), "float32", "input")      # pytree passthrough
+    b.tensor("pool_k", pool_shape, cfg.dtype, "scratch")
+    b.tensor("pool_v", pool_shape, cfg.dtype, "scratch")
+    b.tensor("tables", (batch, bps), "int32", "input", ("batch", None))
+    b.tensor("tokens", (batch, max_seq), "int32", "input", ("batch", None))
+    b.tensor("first_logits", (batch, cfg.vocab_size), "float32", "output")
+    b.emit(Op.GRAPH_EXEC, ["first_logits", "pool_k", "pool_v"],
+           ["params", "pool_k", "pool_v", "tokens", "tables"],
+           artifact="paged_prefill", block_size=block_size)
+    b.emit(Op.POLL, [], ["first_logits"])
+    b.close_block("prefill")
+    b.tensor("next_token", (batch,), "int32", "input", ("batch",))
+    b.tensor("pos", (batch,), "int32", "input", ("batch",))
+    b.tensor("new_tokens", (batch, 1), "int32", "output", ("batch", None))
+    b.emit(Op.GRAPH_EXEC, ["new_tokens", "pool_k", "pool_v"],
+           ["params", "pool_k", "pool_v", "next_token", "pos", "tables"],
+           artifact="paged_decode", block_size=block_size,
+           greedy=bool(greedy), temperature=float(temperature))
+    b.emit(Op.POLL, [], ["new_tokens"])
+    b.close_block("decode")
+    return b.build({"paged_prefill": prefill_fn, "paged_decode": decode_fn})

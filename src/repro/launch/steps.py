@@ -124,6 +124,68 @@ def make_decode_step(cfg: ModelConfig, unroll: bool = False):
     return decode_step
 
 
+def sample_tokens(logits: jax.Array, greedy: bool, temperature: float,
+                  key: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token pick shared by the host-side (dense) engine and the
+    compiled paged decode program, so greedy decoding is bit-identical
+    across both paths. logits: (B, V) -> (B,) int32."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("temperature sampling requires a PRNG key")
+    t = max(float(temperature), 1e-6)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / t, axis=-1).astype(jnp.int32)
+
+
+def make_paged_prefill_step(cfg: ModelConfig, unroll: bool = False):
+    """Prefill that lands its KV directly in the paged pool: same dense
+    forward as ``make_prefill_step`` (identical last-token logits, hence
+    identical first sampled token), then one device-side scatter through
+    the batch's block tables. Signature:
+    (params, pool_k, pool_v, {"inputs": (B,S), "tables": (B,W)})
+      -> (last_logits (B,V), pool_k', pool_v')."""
+    def paged_prefill_step(params, pool_k, pool_v, batch):
+        logits, cache, _ = tf.forward_full(cfg, params, batch["inputs"],
+                                           want_cache=True, unroll=unroll)
+        pool_k, pool_v = tf.scatter_prefill_cache(
+            pool_k, pool_v, cache["k"], cache["v"], batch["tables"])
+        return logits[:, -1], pool_k, pool_v
+    return paged_prefill_step
+
+
+def make_paged_decode_step(cfg: ModelConfig, window: int = 1,
+                           greedy: bool = True, temperature: float = 1.0,
+                           unroll: bool = False):
+    """Persistent multi-token decode program for the paged pool.
+
+    One dispatch advances every lane ``window`` tokens: a ``lax.scan``
+    over the window runs forward → sample → feed-back entirely on
+    device, so the host touches only (B, window) sampled ints per
+    dispatch instead of a logits round-trip per token. Signature:
+    (params, pool_k, pool_v, {"tokens": (B,), "pos": (B,),
+                              "tables": (B,W)[, "key"]})
+      -> (tokens (B,window), pool_k', pool_v')
+    where batch["tokens"] is the last already-sampled token (written at
+    position batch["pos"]) and the output rows are the ``window`` newly
+    sampled tokens per lane."""
+    def paged_decode_step(params, pool_k, pool_v, batch):
+        def body(carry, key):
+            tok, pk, pv, pos = carry
+            logits, pk, pv = tf.forward_decode_paged(
+                cfg, params, tok[:, None], pos, pk, pv, batch["tables"],
+                unroll=unroll)
+            nxt = sample_tokens(logits[:, 0], greedy, temperature, key)
+            return (nxt, pk, pv, pos + 1), nxt
+
+        keys = None if greedy else jax.random.split(batch["key"], window)
+        carry = (batch["tokens"], pool_k, pool_v, batch["pos"])
+        (_, pool_k, pool_v, _), toks = jax.lax.scan(
+            body, carry, xs=keys, length=window)
+        return toks.T, pool_k, pool_v
+    return paged_decode_step
+
+
 def step_for(cfg: ModelConfig, shape: ShapeConfig, unroll: bool):
     """(callable, example-args builder) for one dry-run cell."""
     if shape.kind == "train":

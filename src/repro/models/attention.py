@@ -166,6 +166,48 @@ def prefill_attention(cfg: ModelConfig, p: dict, x: jax.Array,
     return y, (k, v)
 
 
+def decode_attention_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                           pos: jax.Array, pool_k: jax.Array,
+                           pool_v: jax.Array, tables: jax.Array):
+    """One-token decode against a paged KV pool (one layer's slice).
+
+    x: (B,1,d); pos: (B,) logical position of the new token; pool_k/v:
+    (num_blocks+1, block_size, Hkv, D) — the last row is the null block;
+    tables: (B, W) int32 physical block ids, null-padded. Logical
+    position t of lane b lives at (tables[b, t // bs], t % bs).
+
+    The new token's K/V is scattered at its (block, offset) — live lanes
+    hold disjoint blocks so the B writes never collide; pad lanes all
+    target the null row, whose garbage is only ever gathered back behind
+    the NEG_INF mask. Greedy decode stays bit-identical to the dense
+    ``decode_attention``: the valid positions carry exactly the same
+    scores, and masked lanes contribute exact zeros to the softmax.
+
+    Returns (out (B,1,d), new_pool_k, new_pool_v).
+    """
+    NBp1, bs, Hkv, D = pool_k.shape
+    B, W = tables.shape
+    H = cfg.num_heads
+    G = H // Hkv
+    q, k, v = _qkv(cfg, p, x, pos[:, None])
+    blk = jnp.take_along_axis(tables, (pos[:, None] // bs) % W, axis=1)[:, 0]
+    off = pos % bs
+    pool_k = pool_k.at[blk, off].set(k[:, 0].astype(pool_k.dtype))
+    pool_v = pool_v.at[blk, off].set(v[:, 0].astype(pool_v.dtype))
+
+    kg = pool_k[tables].reshape(B, W * bs, Hkv, D)      # gather block axis
+    vg = pool_v[tables].reshape(B, W * bs, Hkv, D)
+    qg = q.reshape(B, 1, Hkv, G, D)
+    s_ = _grouped_scores(qg, kg) / (D ** 0.5)           # (B,Hkv,G,1,W*bs)
+    idx = jnp.arange(W * bs)[None, :]
+    valid = idx <= pos[:, None]
+    s_ = jnp.where(valid[:, None, None, None, :], s_, NEG_INF)
+    a = jax.nn.softmax(s_, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", a, vg).reshape(B, 1, H, D)
+    y = jnp.einsum("bshd,hdk->bsk", o, p["wo"])
+    return y, pool_k, pool_v
+
+
 def decode_attention(cfg: ModelConfig, p: dict, x: jax.Array,
                      pos: jax.Array, k_cache: jax.Array, v_cache: jax.Array):
     """One-token decode: x (B,1,d), pos (B,), caches (B,S,Hkv,D).

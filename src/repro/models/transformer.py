@@ -168,6 +168,24 @@ def block_decode(cfg: ModelConfig, p: dict, x: jax.Array, pos: jax.Array,
     return x + y2, new_cache
 
 
+def block_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                       pos: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                       tables: jax.Array):
+    """One-token block against a paged KV pool layer slice. Identical math
+    to ``block_decode`` around the attention call — greedy bit-identity
+    with the dense engine hinges on this."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    ya, pool_k, pool_v = attn.decode_attention_paged(cfg, p, h, pos,
+                                                     pool_k, pool_v, tables)
+    x = x + ya
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    if cfg.num_experts > 0 and cfg.family != "hybrid":
+        y2, _ = mlpm.moe_ffn(cfg, p, h2)
+    else:
+        y2 = mlpm.swiglu(p, h2)
+    return x + y2, pool_k, pool_v
+
+
 # ---------------------------------------------------------------------------
 # Stack runners
 # ---------------------------------------------------------------------------
@@ -271,3 +289,63 @@ def forward_decode(cfg: ModelConfig, params: dict, inputs: jax.Array,
     x = embed_inputs(cfg, glob, inputs)
     x, new_cache = run_blocks_decode(cfg, blocks, x, pos, cache, unroll)
     return logits_head(cfg, glob, x), new_cache
+
+
+def _check_paged_family(cfg: ModelConfig) -> None:
+    if cfg.family in ("ssm", "hybrid") or cfg.attention != "full":
+        raise NotImplementedError(
+            f"paged KV decode supports full-attention transformer families "
+            f"only (got family={cfg.family}, attention={cfg.attention}); "
+            f"recurrent/sliding state does not page")
+
+
+def forward_decode_paged(cfg: ModelConfig, params: dict, inputs: jax.Array,
+                         pos: jax.Array, pool_k: jax.Array,
+                         pool_v: jax.Array, tables: jax.Array,
+                         unroll: bool = False):
+    """One-token decode addressing a paged KV pool through block tables.
+
+    inputs (B,1) tokens or (B,1,d); pos (B,) int32; pool_k/v
+    (L, num_blocks+1, block_size, Hkv, D); tables (B, W) int32.
+    Returns (logits (B,1,V), new_pool_k, new_pool_v).
+    """
+    _check_paged_family(cfg)
+    glob, blocks = split_params(params)
+    x = embed_inputs(cfg, glob, inputs)
+    if unroll:
+        nk, nv = [], []
+        for i in range(cfg.num_layers):
+            x, pk, pv = block_decode_paged(cfg, _slice_layer(blocks, i), x,
+                                           pos, pool_k[i], pool_v[i], tables)
+            nk.append(pk)
+            nv.append(pv)
+        return (logits_head(cfg, glob, x),
+                jnp.stack(nk), jnp.stack(nv))
+
+    def body(xc, inp):
+        pl, pk, pv = inp
+        xc, pk, pv = block_decode_paged(cfg, pl, xc, pos, pk, pv, tables)
+        return xc, (pk, pv)
+
+    x, (pool_k, pool_v) = jax.lax.scan(body, x, (blocks, pool_k, pool_v))
+    return logits_head(cfg, glob, x), pool_k, pool_v
+
+
+def scatter_prefill_cache(pool_k: jax.Array, pool_v: jax.Array,
+                          cache_k: jax.Array, cache_v: jax.Array,
+                          tables: jax.Array):
+    """Scatter a dense prefill cache (L, B, S, Hkv, D) into the paged pool
+    through block tables (B, W), W * block_size >= S. Pad lanes (tables
+    all-null) land their rows in the null block. Runs inside the compiled
+    prefill step — the pool is addressed device-side, never rebuilt on
+    host."""
+    L, B, S, Hkv, D = cache_k.shape
+    bs = pool_k.shape[2]
+    W = tables.shape[1]
+    tpos = jnp.arange(S, dtype=jnp.int32)[None, :]            # (1, S)
+    blk = jnp.take_along_axis(tables, jnp.broadcast_to((tpos // bs) % W,
+                                                       (B, S)), axis=1)
+    off = jnp.broadcast_to(tpos % bs, (B, S))
+    pool_k = pool_k.at[:, blk, off].set(cache_k.astype(pool_k.dtype))
+    pool_v = pool_v.at[:, blk, off].set(cache_v.astype(pool_v.dtype))
+    return pool_k, pool_v

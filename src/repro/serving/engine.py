@@ -21,7 +21,8 @@ from repro.core import rctc
 from repro.core import rimfs as rimfs_mod
 from repro.core.rhal import TileMesh
 from repro.core.rtpm import Telemetry
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.steps import make_decode_step, make_prefill_step, \
+    sample_tokens
 from repro.models import transformer as tf
 from repro.models.common import init_params, is_spec
 from repro.serving.scheduler import ScheduledRequest
@@ -73,34 +74,33 @@ class Request:
     verdict: str = ""             # admission outcome ("admitted"/"shed: ...")
 
 
-class ServingEngine:
-    """Fixed-slot continuous batching (decode batch = n_slots)."""
+class EngineBase:
+    """Shared continuous-batching scaffolding: submission queue /
+    scheduler admission (with an optional per-request feasibility veto),
+    token sampling, and the drain loop. Subclasses own the cache layout
+    (dense slots vs paged block tables) and the prefill/decode steps."""
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  max_seq: int = 256, greedy: bool = True, scheduler=None,
-                 mesh: Optional[TileMesh] = None):
+                 mesh: Optional[TileMesh] = None, temperature: float = 1.0,
+                 seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.greedy = greedy
+        self.temperature = temperature
         self.scheduler = scheduler      # optional DeadlineScheduler
         self.mesh = mesh                # optional TileMesh (multi-tile)
         self.telemetry = Telemetry()
-        self._prefill = jax.jit(make_prefill_step(cfg))
-        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self._key = jax.random.PRNGKey(seed)
         self._slots: list[Optional[Request]] = [None] * max_batch
         self._pos = np.zeros((max_batch,), np.int32)
-        self._cache = init_params(
-            jax.random.PRNGKey(0), tf.cache_specs(cfg, max_batch, max_seq))
         self._queue: list[Request] = []
-        # The RCB program view of this service (paper-faithful packaging).
-        self.program = rctc.compile_lm_service(
-            cfg, max_batch, max_seq, self._prefill, self._decode)
 
     @classmethod
     def from_rimfs(cls, cfg: ModelConfig, fs: rimfs_mod.RIMFS, driver=None,
-                   **kwargs) -> "ServingEngine":
+                   **kwargs):
         """Provision an engine straight from a RIMFS weight image.
 
         Weights resolve through ``RIMFS.resident(driver)``: repeated
@@ -126,15 +126,29 @@ class ServingEngine:
         else:
             self._queue.append(req)
 
-    def _pop_admitted(self, free_slots: int) -> list:
+    def _pop_admitted(self, free_slots: int, feasible=None) -> list:
         """Next requests to place into free slots: scheduler admission
-        (priority + EDF + shedding) when attached, FIFO otherwise."""
+        (priority + EDF + shedding) when attached, FIFO otherwise.
+
+        ``feasible``: optional ``Request -> Optional[str]`` resource veto
+        (e.g. KV block budget). A verdict string sheds the request —
+        marked done with the verdict, zero compute spent — on both the
+        scheduler and the FIFO path."""
         if self.scheduler is None:
-            out, self._queue = (self._queue[:free_slots],
-                                self._queue[free_slots:])
-            return out
+            admitted = []
+            while self._queue and len(admitted) < free_slots:
+                req = self._queue.pop(0)
+                verdict = feasible(req) if feasible is not None else None
+                if verdict:
+                    req.shed, req.verdict, req.done = True, verdict, True
+                    continue
+                req.verdict = "admitted"
+                admitted.append(req)
+            return admitted
         admitted = []
-        for s in self.scheduler.admit(free_slots):
+        wrapped = None if feasible is None else \
+            (lambda s: feasible(s.payload) if s.payload is not None else None)
+        for s in self.scheduler.admit(free_slots, feasible=wrapped):
             if s.payload is not None:
                 s.payload.verdict = s.verdict
                 admitted.append(s.payload)
@@ -145,6 +159,60 @@ class ServingEngine:
             if r is not None:
                 r.shed, r.verdict, r.done = True, s.verdict, True
         return admitted
+
+    def _sample(self, logits) -> np.ndarray:
+        """(B, V) logits -> (B,) int32 next-token picks. Greedy is a pure
+        argmax; otherwise temperature sampling from the engine's PRNG
+        stream (one split per sampling event, so replays are
+        deterministic for a fixed seed and submission order)."""
+        key = None
+        if not self.greedy:
+            self._key, key = jax.random.split(self._key)
+        return np.asarray(sample_tokens(jnp.asarray(logits), self.greedy,
+                                        self.temperature, key))
+
+    def _finish(self, slot: int, req: Request) -> bool:
+        """Completion check after a decode append. ``max_new`` counts
+        DECODE tokens: the prefill-sampled token rides along in
+        ``out_tokens`` (so a finished request carries max_new + 1 tokens)
+        but does not consume the budget."""
+        return (len(req.out_tokens) - 1 >= req.max_new
+                or self._pos[slot] >= self.max_seq - 1)
+
+    def pending(self) -> int:
+        """Requests waiting for a slot (wherever they queue)."""
+        if self.scheduler is not None:
+            return self.scheduler.pending()
+        return len(self._queue)
+
+    def step(self) -> int:
+        raise NotImplementedError
+
+    def run_until_drained(self, max_steps: int = 10_000) -> None:
+        for _ in range(max_steps):
+            if self.step() == 0 and self.pending() == 0:
+                return
+
+
+class ServingEngine(EngineBase):
+    """Fixed-slot continuous batching (decode batch = n_slots) against a
+    dense (L, B, max_seq, Hkv, D) cache — every slot holds worst-case
+    sequence memory. The paged engine (serving/paged_engine.py) replaces
+    the dense cache with block tables over a shared pool."""
+
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 256, greedy: bool = True, scheduler=None,
+                 mesh: Optional[TileMesh] = None, temperature: float = 1.0,
+                 seed: int = 0):
+        super().__init__(cfg, params, max_batch, max_seq, greedy, scheduler,
+                         mesh, temperature, seed)
+        self._prefill = jax.jit(make_prefill_step(cfg))
+        self._decode = jax.jit(make_decode_step(cfg), donate_argnums=(1,))
+        self._cache = init_params(
+            jax.random.PRNGKey(0), tf.cache_specs(cfg, max_batch, max_seq))
+        # The RCB program view of this service (paper-faithful packaging).
+        self.program = rctc.compile_lm_service(
+            cfg, max_batch, max_seq, self._prefill, self._decode)
 
     def _admit(self) -> None:
         free = [i for i in range(self.max_batch) if self._slots[i] is None]
@@ -173,6 +241,7 @@ class ServingEngine:
             prompts = jnp.stack([jnp.asarray(r.prompt) for _, r in group])
             logits, cache = self._prefill(self.params,
                                           {"inputs": prompts})
+            picks = self._sample(logits)
             for j, (i, req) in enumerate(group):
                 self._slots[i] = req
                 # splice this prompt's KV into slot i of the shared cache
@@ -186,8 +255,7 @@ class ServingEngine:
                         self._cache[key] = jax.lax.dynamic_update_slice(
                             c, src, (0, i) + (0,) * (c.ndim - 2))
                 self._pos[i] = plen
-                tok = int(jnp.argmax(logits[j]))
-                req.out_tokens.append(tok)
+                req.out_tokens.append(int(picks[j]))
 
     def step(self) -> int:
         """One decode step across all live slots. Returns #live."""
@@ -210,24 +278,12 @@ class ServingEngine:
             # (eta/shedding decisions track the measured step cost, not the
             # constructor default)
             self.scheduler.observe_step_latency(dt)
-        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        nxt = self._sample(logits)
         for i in live:
             r = self._slots[i]
             r.out_tokens.append(int(nxt[i]))
             self._pos[i] += 1
-            if len(r.out_tokens) >= r.max_new or \
-                    self._pos[i] >= self.max_seq - 1:
+            if self._finish(i, r):
                 r.done = True
                 self._slots[i] = None
         return len(live)
-
-    def pending(self) -> int:
-        """Requests waiting for a slot (wherever they queue)."""
-        if self.scheduler is not None:
-            return self.scheduler.pending()
-        return len(self._queue)
-
-    def run_until_drained(self, max_steps: int = 10_000) -> None:
-        for _ in range(max_steps):
-            if self.step() == 0 and self.pending() == 0:
-                return

@@ -13,11 +13,21 @@ the sequence's blocks into contiguous (S, H, D) views per step via
 ``jnp.take`` on the pool's block axis (XLA lowers to dynamic-gather; on
 TPU this is the standard paged-attention pattern the Pallas flash-decode
 kernel would consume block-by-block).
+
+Device-side addressing (ISSUE 8): the pool carries one extra physical row —
+the **null block** — that never enters the free list. Block tables padded
+with the null-block id are legal *device inputs*: compiled prefill/decode
+programs (launch/steps.py) scatter inactive/padded lanes into the null row
+and gather it back masked, so the table array itself can ride inside a
+jitted program with a static width. Host-side ``append`` no longer rebuilds
+the pool per token: the scatter is a single jitted, donation-annotated
+update (on accelerator backends the pool buffer is updated in place).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import functools
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -26,16 +36,35 @@ import jax.numpy as jnp
 
 
 class OutOfBlocksError(RuntimeError):
-    pass
+    """KV block pool exhausted.
+
+    Raised by host-side ``allocate``/``_grow``. On the serving path this
+    never escapes a decode step: block-aware admission (PagedServingEngine)
+    consults ``free_blocks()`` *before* placing a request and converts an
+    infeasible reservation into a scheduler shed verdict.
+    """
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_token(k, v, blk, off, layer_k, layer_v):
+    """One token's K/V for all layers into pool row ``blk`` slot ``off``.
+
+    Donated pool arguments: XLA reuses the pool buffers instead of
+    materializing a fresh (L, NB, bs, Hkv, D) copy per appended token —
+    the old ``self.k = self.k.at[...].set(...)`` host loop functionally
+    rebuilt the whole pool every call."""
+    return (k.at[:, blk, off].set(layer_k.astype(k.dtype)),
+            v.at[:, blk, off].set(layer_v.astype(v.dtype)))
 
 
 @dataclasses.dataclass
 class PagedKVCache:
     """Physical pool + symbolic block tables.
 
-    Pool layout: k/v arrays (num_layers, num_blocks, block_size, Hkv, D).
-    A sequence's logical position t lives in physical slot
-    (table[t // block_size], t % block_size).
+    Pool layout: k/v arrays (num_layers, num_blocks + 1, block_size, Hkv,
+    D). Row ``num_blocks`` is the null block (write target for padded
+    lanes; never allocated). A sequence's logical position t lives in
+    physical slot (table[t // block_size], t % block_size).
     """
     num_layers: int
     num_blocks: int
@@ -45,15 +74,21 @@ class PagedKVCache:
     dtype: str = "float32"
 
     def __post_init__(self):
-        shape = (self.num_layers, self.num_blocks, self.block_size,
+        shape = (self.num_layers, self.num_blocks + 1, self.block_size,
                  self.num_kv_heads, self.head_dim)
         self.k = jnp.zeros(shape, jnp.dtype(self.dtype))
         self.v = jnp.zeros(shape, jnp.dtype(self.dtype))
         self._free: list[int] = list(range(self.num_blocks))[::-1]
         self.tables: dict[int, list[int]] = {}     # seq id -> block ids
         self.lengths: dict[int, int] = {}
+        self._arena_ranges: list = []              # (arena, offset) pairs
 
     # ------------------------------------------------------------ accounting
+    @property
+    def null_block(self) -> int:
+        """Physical id of the never-allocated pad/garbage row."""
+        return self.num_blocks
+
     def free_blocks(self) -> int:
         return len(self._free)
 
@@ -64,6 +99,17 @@ class PagedKVCache:
         used = self.num_blocks - len(self._free)
         return used / self.num_blocks
 
+    def blocks_needed(self, tokens: int) -> int:
+        """Blocks a ``tokens``-long sequence occupies."""
+        return (tokens + self.block_size - 1) // self.block_size
+
+    def can_admit(self, tokens: int) -> bool:
+        """Would a worst-case reservation for ``tokens`` fit right now?"""
+        return self.blocks_needed(tokens) <= self.free_blocks()
+
+    def pool_bytes(self) -> int:
+        return int(self.k.nbytes + self.v.nbytes)
+
     # ------------------------------------------------------------- lifecycle
     def allocate(self, seq: int, tokens: int = 0) -> None:
         if seq in self.tables:
@@ -71,7 +117,12 @@ class PagedKVCache:
         self.tables[seq] = []
         self.lengths[seq] = 0
         if tokens:
-            self._grow(seq, tokens)
+            try:
+                self._grow(seq, tokens)
+            except OutOfBlocksError:
+                # failed reservations must not leak a half-grown table
+                self.release(seq)
+                raise
 
     def _grow(self, seq: int, new_tokens: int) -> None:
         need = (self.lengths[seq] + new_tokens + self.block_size - 1) \
@@ -82,6 +133,14 @@ class PagedKVCache:
                     f"pool exhausted ({self.num_blocks} blocks)")
             self.tables[seq].append(self._free.pop())
 
+    def advance(self, seq: int, n: int = 1) -> None:
+        """Mark ``n`` tokens as written by a device-side scatter (the
+        compiled prefill/decode programs own the actual pool writes; the
+        host only tracks lifetimes). Grows the table if the reservation
+        did not already cover the new length."""
+        self._grow(seq, n)
+        self.lengths[seq] += n
+
     def release(self, seq: int) -> int:
         """Free all blocks of a finished sequence (O(1) per block, no data
         movement — the RBL lifetime-management property)."""
@@ -89,6 +148,50 @@ class PagedKVCache:
         self.lengths.pop(seq, None)
         self._free.extend(blocks)
         return len(blocks)
+
+    # ------------------------------------------------- device-side addressing
+    def table_array(self, seqs: Sequence[int], width: Optional[int] = None,
+                    rows: Optional[int] = None) -> np.ndarray:
+        """(rows, width) int32 block-table array for a batch of sequences,
+        padded with the null block — the device input the compiled
+        prefill/decode programs address the pool through. ``rows`` pads
+        the batch axis (inactive lanes scatter into the null row)."""
+        if width is None:
+            width = max((len(self.tables.get(s, ())) for s in seqs),
+                        default=1) or 1
+        rows = len(seqs) if rows is None else rows
+        out = np.full((rows, width), self.null_block, np.int32)
+        for i, s in enumerate(seqs):
+            t = self.tables.get(s, ())
+            out[i, :len(t)] = t[:width]
+        return out
+
+    def lengths_array(self, seqs: Sequence[int],
+                      rows: Optional[int] = None) -> np.ndarray:
+        rows = len(seqs) if rows is None else rows
+        out = np.zeros((rows,), np.int32)
+        for i, s in enumerate(seqs):
+            out[i] = self.lengths.get(s, 0)
+        return out
+
+    # ------------------------------------------------------ arena residency
+    def register_residency(self, driver) -> int:
+        """Register the pool's pages with the driver's DeviceArena so the
+        residency layer (fleet reshapes, watchdog revives, arena
+        telemetry) sees KV memory like any other resident buffer. Returns
+        the bytes registered (0 when the driver has no arena)."""
+        arena = getattr(driver, "arena", None)
+        if arena is None:
+            return 0
+        for buf in (self.k, self.v):
+            self._arena_ranges.append((arena, arena.alloc(buf.nbytes)))
+        return self.pool_bytes()
+
+    def unregister_residency(self) -> None:
+        """Return the pool's arena ranges (engine close / pool teardown)."""
+        ranges, self._arena_ranges = self._arena_ranges, []
+        for arena, off in ranges:
+            arena.free(off)
 
     # ------------------------------------------------------------------- io
     def append(self, seq: int, layer_k: jax.Array, layer_v: jax.Array) -> None:
@@ -98,8 +201,9 @@ class PagedKVCache:
         t = self.lengths[seq]
         blk = self.tables[seq][t // self.block_size]
         off = t % self.block_size
-        self.k = self.k.at[:, blk, off].set(layer_k.astype(self.k.dtype))
-        self.v = self.v.at[:, blk, off].set(layer_v.astype(self.v.dtype))
+        self.k, self.v = _scatter_token(
+            self.k, self.v, jnp.int32(blk), jnp.int32(off),
+            jnp.asarray(layer_k), jnp.asarray(layer_v))
         self.lengths[seq] = t + 1
 
     def gather(self, seq: int, layer: int):
@@ -107,7 +211,11 @@ class PagedKVCache:
         (gather over the block axis; no pool copies are retained)."""
         n = self.lengths[seq]
         if n == 0:
-            return (jnp.zeros((0, self.num_kv_heads, self.head_dim)),) * 2
+            # dtype-correct empties: downstream concatenation/attention on
+            # a pool dtype other than float32 must not silently upcast
+            empty = jnp.zeros((0, self.num_kv_heads, self.head_dim),
+                              self.k.dtype)
+            return empty, empty
         table = jnp.asarray(self.tables[seq], jnp.int32)
         kb = jnp.take(self.k[layer], table, axis=0)     # (blocks, bs, H, D)
         vb = jnp.take(self.v[layer], table, axis=0)
@@ -119,7 +227,15 @@ class PagedKVCache:
 def paged_decode_attention(cache: PagedKVCache, seq: int, layer: int,
                            q: jax.Array) -> jax.Array:
     """Single-token attention against a paged sequence.
-    q: (H, D) with H = G * Hkv. Returns (H, D)."""
+    q: (H, D) with H = G * Hkv. Returns (H, D).
+
+    Attention over zero stored tokens has no defined value (the softmax
+    normalizes an empty axis into NaNs) — that is a caller bug, surfaced
+    as ``ValueError`` instead of NaN propagation."""
+    if cache.lengths.get(seq, 0) == 0:
+        raise ValueError(
+            f"attention over zero-length sequence {seq}: prefill (or "
+            f"append) must store at least one token first")
     k, v = cache.gather(seq, layer)                     # (n, Hkv, D)
     h, d = q.shape
     g = h // cache.num_kv_heads

@@ -1,0 +1,272 @@
+"""Paged-KV continuous batching on the compiled path (ISSUE 8 tentpole).
+
+``PagedServingEngine`` replaces the dense (L, B, max_seq, Hkv, D) slot
+cache with block tables over a shared physical pool (serving/paged_cache):
+
+* **Device-side addressing** — block tables are int32 device inputs of
+  AOT-compiled prefill/decode programs; the pool is gathered/scattered
+  over its block axis *inside* the compiled graphs. The host never
+  rebuilds pool arrays; it only tracks lifetimes.
+* **Prefill/decode disaggregation** — prefill groups ride the PR 5
+  batch-bucket ladder (one fused dispatch per (prompt length, pow2
+  group)); decode rides a persistent multi-token step program: a
+  ``lax.scan`` window runs forward → sample → feed-back on device, so a
+  dispatch advances every lane up to 8 tokens for one host round-trip of
+  (B, window) ints.
+* **AOT executables in the CRC cache** — every compiled shape is keyed
+  ``(service program CRC, shape descriptor)`` in ``Executor``'s
+  module-wide batch cache: engines over the same service program share
+  executables, under the same capacity bound/eviction as batched RCB
+  dispatch.
+* **Occupancy-aware admission** — a feasibility veto reserves worst-case
+  blocks (prompt + max_new) at admission; an infeasible reservation is a
+  scheduler shed verdict, so ``OutOfBlocksError`` cannot fire mid-step.
+  Completion releases the sequence's blocks defrag-free.
+* **Residency** — the pool registers with the driver's DeviceArena so
+  fleet reshapes / watchdog revives account KV memory like any other
+  resident buffer.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import rctc
+from repro.core.executor import Executor
+from repro.core.rhal import TileMesh
+from repro.launch.steps import make_paged_decode_step, make_paged_prefill_step
+from repro.models import transformer as tf
+from repro.serving.engine import EngineBase, Request, params_from_rimfs
+from repro.serving.paged_cache import PagedKVCache
+
+#: Decode-window ladder: one dispatch advances every lane w tokens
+#: (largest rung that no live lane's remaining budget would overshoot).
+DECODE_WINDOWS = (8, 4, 2, 1)
+
+
+def _pow2_at_least(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+class PagedServingEngine(EngineBase):
+    """Continuous batching with paged KV: slots hold block tables, not
+    worst-case dense cache stripes, so capacity is bounded by *blocks in
+    use*, not ``max_batch * max_seq``."""
+
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 max_seq: int = 256, greedy: bool = True, scheduler=None,
+                 mesh: Optional[TileMesh] = None, temperature: float = 1.0,
+                 seed: int = 0, block_size: int = 16,
+                 num_blocks: Optional[int] = None, driver=None):
+        tf._check_paged_family(cfg)
+        if cfg.input_kind != "tokens":
+            raise NotImplementedError("paged serving takes token prompts")
+        super().__init__(cfg, params, max_batch, max_seq, greedy, scheduler,
+                         mesh, temperature, seed)
+        self.block_size = block_size
+        self.blocks_per_seq = (max_seq + block_size - 1) // block_size
+        if num_blocks is None:
+            # full capacity: every slot can hold a max_seq sequence (the
+            # dense engine's memory envelope); callers shrink this to
+            # trade capacity for admission pressure
+            num_blocks = max_batch * self.blocks_per_seq
+        self.cache = PagedKVCache(
+            num_layers=cfg.num_layers, num_blocks=num_blocks,
+            block_size=block_size, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, dtype=cfg.dtype)
+        self._seqs: list[Optional[int]] = [None] * max_batch
+        self._seq_ctr = itertools.count(1)
+        if driver is None and mesh is not None:
+            driver = mesh.primary
+        self.driver = driver
+        if driver is not None:
+            self.cache.register_residency(driver)
+        # the RCB service program; its CRC keys every AOT executable
+        self.program = rctc.compile_paged_lm_service(
+            cfg, max_batch, max_seq, block_size, num_blocks,
+            make_paged_prefill_step(cfg),
+            make_paged_decode_step(cfg, greedy=greedy,
+                                   temperature=temperature),
+            greedy=greedy, temperature=temperature)
+        self._crc = self.program.crc()
+
+    @classmethod
+    def from_rimfs(cls, cfg, fs, driver=None, **kwargs):
+        """Like the base provisioner, but the pool also registers with the
+        driver's arena (a mesh anchors on its primary group)."""
+        if isinstance(driver, TileMesh):
+            kwargs.setdefault("mesh", driver)
+        elif driver is not None:
+            kwargs.setdefault("driver", driver)
+        return cls(cfg, params_from_rimfs(cfg, fs, driver), **kwargs)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        """Release any blocks still held and return arena ranges."""
+        for seq in list(self.cache.tables):
+            self.cache.release(seq)
+        self.cache.unregister_residency()
+
+    def kv_stats(self) -> dict:
+        c = self.cache
+        return {"num_blocks": c.num_blocks, "free_blocks": c.free_blocks(),
+                "block_size": c.block_size,
+                "utilization": round(c.utilization(), 4),
+                "pool_bytes": c.pool_bytes()}
+
+    # ----------------------------------------------------------- executables
+    def _exe(self, desc: tuple, build):
+        key = (self._crc, desc)
+        fn = Executor.aot_cache_get(key)
+        if fn is None:
+            fn = build()
+            Executor.aot_cache_put(key, fn)
+        return fn
+
+    def _prefill_exe(self, plen: int, batch: int, width: int):
+        def build():
+            step = make_paged_prefill_step(self.cfg)
+            return jax.jit(step, donate_argnums=(1, 2)).lower(
+                self.params, self.cache.k, self.cache.v,
+                {"inputs": jax.ShapeDtypeStruct((batch, plen), jnp.int32),
+                 "tables": jax.ShapeDtypeStruct((batch, width),
+                                                jnp.int32)}).compile()
+        return self._exe(("paged_prefill", plen, batch, width), build)
+
+    def _decode_exe(self, batch_args: tuple):
+        bucket, span, window = batch_args
+
+        def build():
+            step = make_paged_decode_step(self.cfg, window=window,
+                                          greedy=self.greedy,
+                                          temperature=self.temperature)
+            batch = {"tokens": jax.ShapeDtypeStruct((bucket,), jnp.int32),
+                     "pos": jax.ShapeDtypeStruct((bucket,), jnp.int32),
+                     "tables": jax.ShapeDtypeStruct((bucket, span),
+                                                    jnp.int32)}
+            if not self.greedy:
+                batch["key"] = self._key     # concrete aval donor
+            return jax.jit(step, donate_argnums=(1, 2)).lower(
+                self.params, self.cache.k, self.cache.v, batch).compile()
+        return self._exe(("paged_decode",) + batch_args, build)
+
+    # ------------------------------------------------------------- admission
+    def _admit(self) -> None:
+        free = [i for i in range(self.max_batch) if self._slots[i] is None]
+        if not free:
+            return
+        # worst-case block reservation at admission: a request is placed
+        # only if prompt + max_new tokens fit the pool RIGHT NOW (budget
+        # is cumulative across this admission round), so OutOfBlocksError
+        # can never fire mid-step — infeasible becomes a shed verdict.
+        budget = self.cache.free_blocks()
+
+        def feasible(req: Request) -> Optional[str]:
+            nonlocal budget
+            # max(·, 1): the decode window always emits >= 1 token, even
+            # for a degenerate max_new=0 request
+            tokens = min(req.prompt.shape[0] + max(req.max_new, 1),
+                         self.max_seq)
+            need = self.cache.blocks_needed(tokens)
+            if need > budget:
+                return (f"shed: out of KV blocks (need {need}, free "
+                        f"{budget} of {self.cache.num_blocks})")
+            budget -= need
+            return None
+
+        placed = list(zip(free, self._pop_admitted(len(free), feasible)))
+        if not placed:
+            return
+        # same grouping discipline as the dense engine: one fused prefill
+        # dispatch per (prompt length, pow2 chunk) — bucket-ladder shapes
+        # keep the AOT cache bounded, per-sample numerics bit-identical
+        by_len: dict = {}
+        for i, req in placed:
+            by_len.setdefault(req.prompt.shape[0], []).append((i, req))
+        groups = []
+        for plen, members in by_len.items():
+            while members:
+                k = 1 << (len(members).bit_length() - 1)   # pow2 <= len
+                groups.append((plen, members[:k]))
+                members = members[k:]
+        for plen, group in groups:
+            seqs = []
+            for i, req in group:
+                seq = next(self._seq_ctr)
+                self.cache.allocate(
+                    seq, tokens=min(plen + max(req.max_new, 1),
+                                    self.max_seq))
+                seqs.append(seq)
+            width = self.cache.blocks_needed(plen)
+            tables = self.cache.table_array(seqs, width=width)
+            prompts = np.stack([r.prompt for _, r in group]).astype(np.int32)
+            fn = self._prefill_exe(plen, len(group), width)
+            logits, self.cache.k, self.cache.v = fn(
+                self.params, self.cache.k, self.cache.v,
+                {"inputs": prompts, "tables": tables})
+            picks = self._sample(logits)
+            for j, (i, req) in enumerate(group):
+                self._slots[i] = req
+                self._seqs[i] = seqs[j]
+                self.cache.advance(seqs[j], plen)
+                self._pos[i] = plen
+                req.out_tokens.append(int(picks[j]))
+
+    # --------------------------------------------------------------- decode
+    def step(self) -> int:
+        """One decode dispatch across all live slots — advances every
+        lane by the window (up to 8 tokens). Returns #live."""
+        self._admit()
+        live = [i for i, r in enumerate(self._slots) if r is not None]
+        if not live:
+            return 0
+        # window: largest rung no lane overshoots (budget nor seq cap)
+        room = min(
+            min(r.max_new - (len(r.out_tokens) - 1) for r in
+                (self._slots[i] for i in live)),
+            min(self.max_seq - 1 - int(self._pos[i]) for i in live))
+        window = next(w for w in DECODE_WINDOWS if w <= max(1, room))
+        # lanes compact into a batch bucket; span bucket bounds the
+        # gathered block axis to the positions actually live this window
+        bucket = _pow2_at_least(len(live))
+        span = min(self.blocks_per_seq, _pow2_at_least(max(
+            self.cache.blocks_needed(int(self._pos[i]) + window)
+            for i in live)))
+        seqs = [self._seqs[i] for i in live]
+        tables = self.cache.table_array(seqs, width=span, rows=bucket)
+        tokens = np.zeros((bucket,), np.int32)
+        pos = np.zeros((bucket,), np.int32)
+        for j, i in enumerate(live):
+            tokens[j] = self._slots[i].out_tokens[-1]
+            pos[j] = self._pos[i]
+        batch = {"tokens": tokens, "pos": pos, "tables": tables}
+        if not self.greedy:
+            self._key, batch["key"] = jax.random.split(self._key)
+        fn = self._decode_exe((bucket, span, window))
+        t0 = time.perf_counter()
+        toks, self.cache.k, self.cache.v = fn(
+            self.params, self.cache.k, self.cache.v, batch)
+        toks = np.asarray(toks)                  # (bucket, window) sync
+        dt = time.perf_counter() - t0
+        # telemetry + admission EWMA are per-TOKEN quantities: a window-w
+        # dispatch is w decode steps' worth of progress
+        self.telemetry.record_latency(dt / window)
+        if self.scheduler is not None:
+            self.scheduler.observe_step_latency(dt / window)
+        for j, i in enumerate(live):
+            r = self._slots[i]
+            r.out_tokens.extend(int(t) for t in toks[j])
+            self.cache.advance(self._seqs[i], window)
+            self._pos[i] += window
+            if self._finish(i, r):
+                r.done = True
+                self.cache.release(self._seqs[i])   # defrag-free recycle
+                self._slots[i] = None
+                self._seqs[i] = None
+        return len(live)

@@ -64,7 +64,9 @@ class DeadlineScheduler:
         """Predicted completion time if admitted now."""
         return self.clock() + (req.tokens_needed + queue_depth) * self.est
 
-    def admit(self, free_slots: int) -> list:
+    def admit(self, free_slots: int,
+              feasible: Optional[Callable[[ScheduledRequest],
+                                          Optional[str]]] = None) -> list:
         """Pop up to `free_slots` feasible requests; shed infeasible ones.
 
         Returns admitted requests (priority + EDF order). Shedding happens
@@ -72,6 +74,12 @@ class DeadlineScheduler:
         latency flat (the determinism property). Shed requests land in the
         side queue for ``drain_shed`` so the dispatcher can fail them back
         to their callers with the verdict.
+
+        ``feasible`` lets the engine veto admission on resources the
+        scheduler cannot see (KV block budget, arena headroom): it
+        returns ``None`` to admit or a human-readable verdict string to
+        shed — resource exhaustion becomes an admission verdict instead
+        of a mid-step crash.
         """
         out: list[ScheduledRequest] = []
         with self._lock:
@@ -84,6 +92,14 @@ class DeadlineScheduler:
                         req.verdict = (f"shed: eta {eta:.4f}s past deadline "
                                        f"{req.deadline:.4f}s "
                                        f"(est {self.est:.4f}s/step)")
+                        self.shed_count += 1
+                        self._shed.append(req)
+                        continue
+                if feasible is not None:
+                    verdict = feasible(req)
+                    if verdict:
+                        req.shed = True
+                        req.verdict = verdict
                         self.shed_count += 1
                         self._shed.append(req)
                         continue

@@ -710,6 +710,10 @@ class InferenceServer:
         s["counters"] = self.platform.telemetry.counters()
         if self.engine is not None:
             s["engine"] = self.engine.telemetry.summary(warmup=1)
+            if hasattr(self.engine, "kv_stats"):
+                # paged-KV engines report pool occupancy: the capacity
+                # signal behind block-aware admission (shed verdicts)
+                s["engine"]["kv"] = self.engine.kv_stats()
         return s
 
     def _provision(self, payload: bytes) -> None:
