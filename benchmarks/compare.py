@@ -115,6 +115,35 @@ def check_lm_decode_gates(new: dict) -> int:
     return warned
 
 
+def check_kernel_gates(new: dict) -> int:
+    """Warn-only gates over the kernels/* rows (ISSUE 9): every linked
+    kernel opcode must match its GRAPH_EXEC artifact twin (same registry
+    math, two dispatch paths — a mismatch means the RHAL handler and the
+    monolithic artifact diverged), and linked dispatch must stay within
+    3x of the monolithic artifact's latency (the per-layer lowering is
+    not allowed to price kernel ops out of the compiled path).
+    Informational, never fails the build."""
+    warned = 0
+
+    def warn(name: str, msg: str) -> None:
+        nonlocal warned
+        warned += 1
+        print(f"::warning title=kernel gate::{name}: {msg}")
+
+    for name, row in sorted(new.items()):
+        if not (name.startswith("kernels/") and name.endswith("_linked")):
+            continue
+        d = row.get("derived", "")
+        if "match=True" not in d:
+            warn(name, "linked kernel op diverged from its GRAPH_EXEC "
+                 "artifact twin")
+        m = re.search(r"vs_graph_exec=([\d.]+)x", d)
+        if m and float(m.group(1)) < 0.33:
+            warn(name, f"linked dispatch at {m.group(1)}x of the "
+                 f"GRAPH_EXEC artifact (gate: >= 0.33x)")
+    return warned
+
+
 def load(path: str) -> dict:
     try:
         with open(path) as f:
@@ -149,6 +178,7 @@ def main(argv=None) -> int:
     fleet_warnings = check_fleet_gates(new)
     integrity_warnings = check_integrity_gates(new)
     lm_decode_warnings = check_lm_decode_gates(new)
+    kernel_warnings = check_kernel_gates(new)
 
     regressed = improved = 0
     for name in sorted(set(old) & set(new)):
@@ -173,7 +203,8 @@ def main(argv=None) -> int:
           f"{len(set(old) & set(new))} compared, "
           f"{fleet_warnings} fleet-gate warnings, "
           f"{integrity_warnings} integrity-gate warnings, "
-          f"{lm_decode_warnings} lm_decode-gate warnings "
+          f"{lm_decode_warnings} lm_decode-gate warnings, "
+          f"{kernel_warnings} kernel-gate warnings "
           f"(threshold +{args.threshold:.0%}, warn-only)")
     return 0                             # NEVER fails the build
 

@@ -763,11 +763,22 @@ def serving_concurrency_bench(per_client: int = 6, pipeline: int = 3) -> None:
 
 
 # ---------------------------------------------------------------------------
-# Pallas kernels (interpret mode — correctness-path timing only)
+# Pallas kernels: linked opcode vs GRAPH_EXEC artifact, per family (ISSUE 9)
 # ---------------------------------------------------------------------------
 
-def kernel_microbench(rng=None) -> None:
+def kernel_microbench(rng=None, iters: int = 10) -> None:
+    """kernels/* rows: each Pallas kernel dispatched as its linked RCB
+    opcode (Op.ATTENTION/MATMUL_INT8/SSM_SCAN/WKV6 through the RHAL
+    ``link_compute`` registry handler) vs the SAME registry math wrapped
+    as one monolithic GRAPH_EXEC artifact — the pre-registry lowering.
+    Both run through ``Executor.run`` on an identically shaped one-op
+    program, so the delta is pure dispatch-path cost; the derived column
+    carries the ratio plus a match gate (``compare.py
+    check_kernel_gates``, warn-only). The interpret-mode wrapper rows
+    stay as raw-latency trend lines."""
     rng = rng or np.random.RandomState(0)
+    from repro.core.rcb import RCB, RCBOp, TensorDesc
+    from repro.kernels import registry as kreg
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.int8_matmul.ops import int8_matmul
     q = jnp.asarray(rng.randn(1, 128, 4, 64), jnp.float32)
@@ -780,6 +791,55 @@ def kernel_microbench(rng=None) -> None:
     s = jnp.asarray(rng.rand(128).astype(np.float32))
     t = min(_time(lambda: int8_matmul(xi, wi, s).block_until_ready(), 5))
     emit("kernels/int8_matmul_interpret", t * 1e6, "vs ref in tests")
+
+    def arr(*shape):
+        return jnp.asarray(rng.randn(*shape), jnp.float32)
+
+    lw = -jnp.abs(arr(1, 32, 2, 16)).clip(0.05, 3.0)
+    cases = {
+        "attention": (Op.ATTENTION, (arr(1, 64, 4, 32), arr(1, 64, 2, 32),
+                                     arr(1, 64, 2, 32)), {"causal": True}),
+        "matmul_int8": (Op.MATMUL_INT8, (xi, wi, s),
+                        {"out_dtype": "float32"}),
+        "ssm_scan": (Op.SSM_SCAN, (-jnp.abs(arr(1, 32, 8, 4)),
+                                   arr(1, 32, 8, 4), arr(1, 32, 4)), {}),
+        "wkv6": (Op.WKV6, (arr(1, 32, 2, 16), arr(1, 32, 2, 16),
+                           arr(1, 32, 2, 16), lw, arr(2, 16)), {}),
+    }
+    ex = Executor()
+    for name, (opcode, args, attrs) in cases.items():
+        ref = jax.block_until_ready(kreg.call_op(name, args, attrs))
+        tensors = {f"in{i}": TensorDesc(f"in{i}", tuple(a.shape),
+                                        str(a.dtype), "input")
+                   for i, a in enumerate(args)}
+        tensors["out"] = TensorDesc("out", tuple(ref.shape),
+                                    str(ref.dtype), "output")
+        srcs = tuple(f"in{i}" for i in range(len(args)))
+        ins = {f"in{i}": np.asarray(a) for i, a in enumerate(args)}
+        prog_k = RCBProgram(f"bench_k_{name}", dict(tensors), [RCB(
+            0, "layer", (), (RCBOp(opcode, ("out",), srcs, attrs),
+                             RCBOp(Op.FENCE)))])
+        prog_g = RCBProgram(f"bench_g_{name}", dict(tensors), [RCB(
+            0, "layer", (), (RCBOp(Op.GRAPH_EXEC, ("out",), srcs,
+                                   {"artifact": name}),
+                             RCBOp(Op.FENCE)))],
+            artifacts={name: jax.jit(
+                lambda *xs, _n=name, _a=attrs: kreg.call_op(_n, xs, _a))})
+        b_k = rbl.bind(prog_k, inputs=dict(ins))
+        b_g = rbl.bind(prog_g, inputs=dict(ins))
+        o_k = np.asarray(jax.block_until_ready(ex.run(b_k)["out"]))
+        o_g = np.asarray(jax.block_until_ready(ex.run(b_g)["out"]))
+        match = np.allclose(o_k, o_g, rtol=0, atol=1e-6)
+        t_g = min(_time(lambda: jax.block_until_ready(
+            ex.run(b_g)["out"]), iters))
+        t_k = min(_time(lambda: jax.block_until_ready(
+            ex.run(b_k)["out"]), iters))
+        emit(f"kernels/{name}_graph_exec", t_g * 1e6,
+             "monolithic artifact dispatch (pre-registry lowering)")
+        emit(f"kernels/{name}_linked", t_k * 1e6,
+             f"vs_graph_exec={t_g / t_k:.2f}x; match={match}; "
+             f"bit_identical={np.array_equal(o_k, o_g)}; "
+             f"params={kreg.params_for(name, args)}")
 
 
 # ---------------------------------------------------------------------------

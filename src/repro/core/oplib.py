@@ -113,6 +113,39 @@ def passthrough(x, attrs):
     return x
 
 
+def rmsnorm(x, w, attrs):
+    from repro.models.common import rms_norm
+    return rms_norm(x, w, eps=float((attrs or {}).get("eps", 1e-5)))
+
+
+def rope(x, positions, attrs):
+    from repro.models.common import apply_rope
+    return apply_rope(x, positions,
+                      theta=float((attrs or {}).get("theta", 10000.0)))
+
+
+def silu_mul(gate, x, attrs=None):
+    return jax.nn.silu(gate) * x
+
+
+# Kernel opcodes dispatch through the registry (kernels/registry.py) so the
+# interpreted path, GRAPH_EXEC artifacts and linked handlers share one
+# implementation per kernel (fallback ladder included).
+OP_KERNELS: dict[Op, str] = {
+    Op.ATTENTION: "attention",
+    Op.MATMUL_INT8: "matmul_int8",
+    Op.SSM_SCAN: "ssm_scan",
+    Op.WKV6: "wkv6",
+}
+
+
+def _kernel_fn(name: str) -> Callable:
+    def fn(srcs, attrs):
+        from repro.kernels import registry
+        return registry.call_op(name, srcs, attrs)
+    return fn
+
+
 _TABLE: dict[Op, Callable] = {
     Op.GEMM: lambda srcs, attrs: gemm(srcs[0], srcs[1], attrs),
     Op.GEMM_I8: lambda srcs, attrs: gemm_i8(srcs[0], srcs[1], attrs),
@@ -132,6 +165,13 @@ _TABLE: dict[Op, Callable] = {
     Op.DEQUANT: lambda srcs, attrs: dequantize(srcs[0], attrs),
     Op.RESHAPE: lambda srcs, attrs: reshape(srcs[0], attrs),
     Op.PASSTHROUGH: lambda srcs, attrs: passthrough(srcs[0], attrs),
+    Op.RMSNORM: lambda srcs, attrs: rmsnorm(srcs[0], srcs[1], attrs),
+    Op.ROPE: lambda srcs, attrs: rope(srcs[0], srcs[1], attrs),
+    Op.SILU_MUL: lambda srcs, attrs: silu_mul(srcs[0], srcs[1], attrs),
+    Op.ATTENTION: _kernel_fn("attention"),
+    Op.MATMUL_INT8: _kernel_fn("matmul_int8"),
+    Op.SSM_SCAN: _kernel_fn("ssm_scan"),
+    Op.WKV6: _kernel_fn("wkv6"),
 }
 
 

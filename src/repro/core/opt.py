@@ -42,6 +42,10 @@ _PURE = {
     Op.RELU, Op.SOFTMAX, Op.MAXPOOL, Op.AVGPOOL_GLOBAL, Op.SCALE_SHIFT,
     Op.QUANTIZE, Op.DEQUANT, Op.RESHAPE, Op.GEMM_I8, Op.CONV2D_I8,
     Op.PASSTHROUGH, Op.SCALE_SHIFT_RELU, Op.ADD_RELU,
+    # LM-layer ops (per-layer RCTC lowering): side-effect-free computes,
+    # eligible for dead-scratch elimination like any other compute slot.
+    Op.RMSNORM, Op.ROPE, Op.SILU_MUL,
+    Op.ATTENTION, Op.MATMUL_INT8, Op.SSM_SCAN, Op.WKV6,
 }
 
 _FUSE_RELU = {Op.SCALE_SHIFT: Op.SCALE_SHIFT_RELU, Op.ADD: Op.ADD_RELU}

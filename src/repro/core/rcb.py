@@ -63,8 +63,17 @@ class Op(enum.IntEnum):
     PASSTHROUGH = 34     # dst, x — identity (paper's transfer microbenchmark)
     SCALE_SHIFT_RELU = 35  # dst, x, scale, shift — fused (core/opt.py F1)
     ADD_RELU = 36        # dst, a, b — fused (core/opt.py F2)
+    # --- LM block glue (per-layer RCTC lowering, DESIGN.md §13) -------------
+    RMSNORM = 37         # dst, x, w, attrs: eps
+    ROPE = 38            # dst, x(B,S,H,D), positions(B,S), attrs: theta
+    SILU_MUL = 39        # dst, gate, x — silu(gate) * x (swiglu / z-gate)
     # --- graph artifacts (compiled ADF-graph analogue) ----------------------
     GRAPH_EXEC = 40      # dsts, srcs, attrs: artifact id (jitted step fn)
+    # --- linked kernel dispatches (kernels/registry.py handlers) ------------
+    ATTENTION = 41       # dst, q, k, v, attrs: causal, impl
+    MATMUL_INT8 = 42     # dst, x(int8), w(int8), scale, attrs: out_dtype
+    SSM_SCAN = 43        # dst, da, bx, c, attrs: impl
+    WKV6 = 44            # dst, r, k, v, lw, u, attrs: impl
     # --- distribution -------------------------------------------------------
     COLLECTIVE = 50      # dst, src, attrs: kind, axis
     # --- synchronization (RHAL fence/poll) ----------------------------------

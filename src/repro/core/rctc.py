@@ -414,3 +414,307 @@ def compile_paged_lm_service(cfg, batch: int, max_seq: int, block_size: int,
     b.emit(Op.POLL, [], ["new_tokens"])
     b.close_block("decode")
     return b.build({"paged_prefill": prefill_fn, "paged_decode": decode_fn})
+
+
+# ---------------------------------------------------------------------------
+# Per-layer LM block translation (DESIGN.md §13: kernel-handler lowering)
+# ---------------------------------------------------------------------------
+#
+# Unlike compile_lm_service (one opaque GRAPH_EXEC per phase), this lowering
+# opens the LM layers up to the RCB tooling: every attention / scan / matmul
+# in the hot path becomes its own op — kernel opcodes (ATTENTION / SSM_SCAN /
+# WKV6) dispatch through the kernel registry's link_compute handlers, dense
+# glue (RMSNORM / ROPE / SILU_MUL / GEMM / ADD) through the generic vtable —
+# so the peephole pass, ResidencyPlan, partitioner and batch ladder all see
+# inside the layers. Recurrent-family projection stages that would need a
+# dozen one-off opcodes (token-shift mixing, LoRA decay, group-norm gating)
+# stay as small per-stage GRAPH_EXEC glue artifacts.
+
+def _jit_artifact(fn):
+    import jax
+    return jax.jit(fn)
+
+
+def _rwkv_pre_artifact(cfg, keys):
+    import jax.numpy as jnp
+    from repro.models import rwkv6 as rwkv
+
+    def fn(h, *ws):
+        p = dict(zip(keys, ws))
+        ts0 = jnp.zeros((h.shape[0], h.shape[2]), h.dtype)
+        return rwkv.time_mix_pre(cfg, p, h, ts0)
+    return _jit_artifact(fn)
+
+
+def _rwkv_post_artifact(cfg, keys, x_dtype):
+    from repro.models import rwkv6 as rwkv
+
+    def fn(y, g, *ws):
+        p = dict(zip(keys, ws))
+        return rwkv.time_mix_post(cfg, p, y, g, x_dtype)
+    return _jit_artifact(fn)
+
+
+def _rwkv_cm_artifact(cfg, keys):
+    import jax.numpy as jnp
+    from repro.models import rwkv6 as rwkv
+
+    def fn(h, *ws):
+        p = dict(zip(keys, ws))
+        ts0 = jnp.zeros((h.shape[0], h.shape[2]), h.dtype)
+        return rwkv.channel_mix(cfg, p, h, ts0)[0]
+    return _jit_artifact(fn)
+
+
+def _ssm_pre_artifact(cfg, keys):
+    from repro.models import mamba as mam
+
+    def fn(h, *ws):
+        p = dict(zip(keys, ws))
+        return mam.ssm_kernel_inputs(cfg, p, h)
+    return _jit_artifact(fn)
+
+
+def _ssm_post_artifact(cfg, keys, x_dtype):
+    from repro.models import mamba as mam
+
+    def fn(y, u, z, *ws):
+        p = dict(zip(keys, ws))
+        return mam.ssm_output(cfg, p, y, u, z, x_dtype)
+    return _jit_artifact(fn)
+
+
+def _moe_artifact(cfg, keys):
+    from repro.models import mlp as mlpm
+
+    def fn(h, *ws):
+        p = dict(zip(keys, ws))
+        return mlpm.moe_ffn(cfg, p, h)[0]
+    return _jit_artifact(fn)
+
+
+def compile_transformer_block(cfg, params, batch: int, seq_len: int,
+                              optimize: bool = True):
+    """Translate an LM's layer stack into a per-layer RCB program.
+
+    ``params``: stacked model params (models/transformer.model_specs layout,
+    leading num_layers dim on block entries). Input tensors: ``hidden``
+    (B,S,d) pre-embedded states and, for rope families, ``positions`` (B,S)
+    int32. Output: ``logits`` (B,S,V). Returns (RCBProgram, RIMFS image);
+    glue artifacts ride on the program like the LM service programs'.
+
+    Family routing: dense/moe/vlm/audio lower to a fully generic opcode
+    stream around ``Op.ATTENTION``; ssm (rwkv6) and hybrid (hymba) lower
+    their mixers to ``Op.WKV6`` / ``Op.SSM_SCAN`` (+ attention) with
+    per-stage GRAPH_EXEC glue. Sliding-window attention is exact only while
+    the window covers the whole sequence.
+    """
+    from repro.models.transformer import split_params
+
+    if cfg.attention == "sliding" and seq_len > cfg.sliding_window:
+        raise NotImplementedError(
+            f"Op.ATTENTION lowers full causal attention; sliding window "
+            f"{cfg.sliding_window} < seq_len {seq_len} would diverge")
+
+    B, S, d, V = batch, seq_len, cfg.d_model, cfg.vocab_size
+    dt = cfg.dtype
+    eps = float(cfg.norm_eps)
+    b = _Builder(f"lm_blocks_{cfg.name}")
+    files: dict[str, np.ndarray] = {}
+    artifacts: dict[str, Any] = {}
+
+    def weight(name, arr):
+        arr = np.ascontiguousarray(np.asarray(arr))
+        files[name] = arr
+        b.tensor(name, arr.shape, str(arr.dtype), "weight")
+        return name
+
+    def layer_weights(li, pl, keys):
+        return [weight(f"L{li}.{k}", pl[k]) for k in keys]
+
+    glob, blocks = split_params(params)
+    layers = [{k: np.asarray(v[li]) for k, v in blocks.items()}
+              for li in range(cfg.num_layers)]
+
+    b.tensor("hidden", (B, S, d), dt, "input", ("batch", None, None))
+    need_positions = cfg.family != "ssm" and cfg.use_rope
+    if need_positions:
+        b.tensor("positions", (B, S), "int32", "input", ("batch", None))
+
+    def emit_rmsnorm(x, wname, warr):
+        w = weight(wname, warr)
+        t = b.scratch((B, S, d), dt, "ln")
+        b.emit(Op.RMSNORM, [t], [x, w], eps=eps)
+        return t
+
+    def emit_add(a, c, shape=None):
+        t = b.scratch(shape or (B, S, d), dt)
+        b.emit(Op.ADD, [t], [a, c])
+        return t
+
+    # -- dense attention sub-graph (also the hybrid attention branch) -------
+    def emit_attention(x_h, li, pl):
+        H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+        def proj(tag, nh, norm_key):
+            w = weight(f"L{li}.w{tag}",
+                       np.asarray(pl[f"w{tag}"]).reshape(d, nh * D))
+            t = b.scratch((B, S, nh * D), dt, tag)
+            b.emit(Op.GEMM, [t], [x_h, w])
+            if cfg.qkv_bias and f"b{tag}" in pl:
+                bias = weight(f"L{li}.b{tag}",
+                              np.asarray(pl[f"b{tag}"]).reshape(nh * D))
+                t = emit_add(t, bias, (B, S, nh * D))
+            t4 = b.scratch((B, S, nh, D), dt)
+            b.emit(Op.RESHAPE, [t4], [t], shape=[B, S, nh, D])
+            if cfg.qk_norm and norm_key:
+                nw = weight(f"L{li}.{norm_key}", pl[norm_key])
+                t5 = b.scratch((B, S, nh, D), dt)
+                b.emit(Op.RMSNORM, [t5], [t4, nw], eps=eps)
+                t4 = t5
+            if cfg.use_rope and tag != "v":
+                t6 = b.scratch((B, S, nh, D), dt)
+                b.emit(Op.ROPE, [t6], [t4, "positions"],
+                       theta=float(cfg.rope_theta))
+                t4 = t6
+            return t4
+
+        q = proj("q", H, "q_norm")
+        k = proj("k", Hkv, "k_norm")
+        v = proj("v", Hkv, None)
+        att = b.scratch((B, S, H, D), dt, "att")
+        b.emit(Op.ATTENTION, [att], [q, k, v], causal=True)
+        af = b.scratch((B, S, H * D), dt)
+        b.emit(Op.RESHAPE, [af], [att], shape=[B, S, H * D])
+        wo = weight(f"L{li}.wo", np.asarray(pl["wo"]).reshape(H * D, d))
+        ao = b.scratch((B, S, d), dt)
+        b.emit(Op.GEMM, [ao], [af, wo])
+        return ao
+
+    def emit_swiglu(h2, li, pl):
+        f = cfg.d_ff
+        wg = weight(f"L{li}.mlp_gate", pl["mlp_wi_gate"])
+        wu = weight(f"L{li}.mlp_up", pl["mlp_wi_up"])
+        wo = weight(f"L{li}.mlp_out", pl["mlp_wo"])
+        g = b.scratch((B, S, f), dt, "ffg")
+        b.emit(Op.GEMM, [g], [h2, wg])
+        u = b.scratch((B, S, f), dt, "ffu")
+        b.emit(Op.GEMM, [u], [h2, wu])
+        m = b.scratch((B, S, f), dt)
+        b.emit(Op.SILU_MUL, [m], [g, u])
+        o = b.scratch((B, S, d), dt)
+        b.emit(Op.GEMM, [o], [m, wo])
+        return o
+
+    def emit_moe(h2, li, pl):
+        keys = ["router", "we_gate", "we_up", "we_out"]
+        if cfg.moe_dense_residual:
+            keys += ["dense_wi_gate", "dense_wi_up", "dense_wo"]
+        srcs = [h2] + layer_weights(li, pl, keys)
+        y2 = b.scratch((B, S, d), dt, "moe")
+        name = f"L{li}.moe"
+        artifacts[name] = _moe_artifact(cfg, keys)
+        b.emit(Op.GRAPH_EXEC, [y2], srcs, artifact=name)
+        return y2
+
+    def emit_mamba(h, li, pl):
+        di, N = cfg.d_model, cfg.ssm_state
+        pre_keys = ["m_in", "m_x", "m_dt", "m_dt_b", "m_alog"]
+        srcs = [h] + layer_weights(li, pl, pre_keys)
+        da = b.scratch((B, S, di, N), "float32", "da")
+        bx = b.scratch((B, S, di, N), "float32", "bx")
+        c = b.scratch((B, S, N), "float32", "ssc")
+        u = b.scratch((B, S, di), "float32", "ssu")
+        z = b.scratch((B, S, di), dt, "ssz")
+        name = f"L{li}.ssm_pre"
+        artifacts[name] = _ssm_pre_artifact(cfg, pre_keys)
+        b.emit(Op.GRAPH_EXEC, [da, bx, c, u, z], srcs, artifact=name)
+        ys = b.scratch((B, S, di), "float32", "ssy")
+        b.emit(Op.SSM_SCAN, [ys], [da, bx, c])
+        post_keys = ["m_d", "m_out"]
+        srcs2 = [ys, u, z] + layer_weights(li, pl, post_keys)
+        ym = b.scratch((B, S, d), dt, "ssm")
+        name2 = f"L{li}.ssm_post"
+        artifacts[name2] = _ssm_post_artifact(cfg, post_keys, dt)
+        b.emit(Op.GRAPH_EXEC, [ym], srcs2, artifact=name2)
+        return ym
+
+    def emit_rwkv_layer(x, li, pl):
+        K = cfg.rwkv_head_dim
+        H = d // K
+        h = emit_rmsnorm(x, f"L{li}.ln1", pl["ln1"])
+        pre_keys = ["tm_mix", "tm_wr", "tm_wk", "tm_wv", "tm_wg",
+                    "tm_w0", "tm_wa", "tm_wb"]
+        srcs = [h] + layer_weights(li, pl, pre_keys)
+        r = b.scratch((B, S, H, K), "float32", "wr")
+        k = b.scratch((B, S, H, K), "float32", "wk")
+        v = b.scratch((B, S, H, K), "float32", "wv")
+        lw = b.scratch((B, S, H, K), "float32", "wlw")
+        g = b.scratch((B, S, d), dt, "wg")
+        name = f"L{li}.tm_pre"
+        artifacts[name] = _rwkv_pre_artifact(cfg, pre_keys)
+        b.emit(Op.GRAPH_EXEC, [r, k, v, lw, g], srcs, artifact=name)
+        uw = weight(f"L{li}.tm_u", np.asarray(pl["tm_u"], np.float32))
+        y = b.scratch((B, S, H, K), "float32", "wy")
+        b.emit(Op.WKV6, [y], [r, k, v, lw, uw])
+        post_keys = ["tm_ln_w", "tm_ln_b", "tm_wo"]
+        srcs2 = [y, g] + layer_weights(li, pl, post_keys)
+        to = b.scratch((B, S, d), dt, "tm")
+        name2 = f"L{li}.tm_post"
+        artifacts[name2] = _rwkv_post_artifact(cfg, post_keys, dt)
+        b.emit(Op.GRAPH_EXEC, [to], srcs2, artifact=name2)
+        x = emit_add(x, to)
+        h2 = emit_rmsnorm(x, f"L{li}.ln2", pl["ln2"])
+        cm_keys = ["cm_mix", "cm_wk", "cm_wv", "cm_wr"]
+        srcs3 = [h2] + layer_weights(li, pl, cm_keys)
+        y2 = b.scratch((B, S, d), dt, "cm")
+        name3 = f"L{li}.cm"
+        artifacts[name3] = _rwkv_cm_artifact(cfg, cm_keys)
+        b.emit(Op.GRAPH_EXEC, [y2], srcs3, artifact=name3)
+        return emit_add(x, y2)
+
+    half = zero = None
+    if cfg.family == "hybrid":
+        act_np = rimfs_mod._dtype_of(dt)
+        half = weight("c.half", np.full((1,), 0.5, act_np))
+        zero = weight("c.zero", np.zeros((1,), act_np))
+
+    x = "hidden"
+    for li, pl in enumerate(layers):
+        if cfg.family == "ssm":
+            x = emit_rwkv_layer(x, li, pl)
+        else:
+            h = emit_rmsnorm(x, f"L{li}.ln1", pl["ln1"])
+            ya = emit_attention(h, li, pl)
+            if cfg.family == "hybrid":
+                ym = emit_mamba(h, li, pl)
+                s1 = emit_add(ya, ym)
+                s2 = b.scratch((B, S, d), dt)
+                b.emit(Op.SCALE_SHIFT, [s2], [s1, half, zero])
+                x = emit_add(x, s2)
+            else:
+                x = emit_add(x, ya)
+            h2 = emit_rmsnorm(x, f"L{li}.ln2", pl["ln2"])
+            if cfg.num_experts > 0 and cfg.family != "hybrid":
+                y2 = emit_moe(h2, li, pl)
+            else:
+                y2 = emit_swiglu(h2, li, pl)
+            x = emit_add(x, y2)
+        b.close_block("layer")
+
+    xf = emit_rmsnorm(x, "final_norm", glob["final_norm"])
+    b.tensor("logits", (B, S, V), dt, "output", ("batch", None, "vocab"))
+    if cfg.tie_embeddings:
+        ew = weight("embed", glob["embed"])                 # (V, d)
+        b.emit(Op.GEMM, ["logits"], [xf, ew], tb=True)
+    else:
+        lw_ = weight("lm_head", glob["lm_head"])            # (d, V)
+        b.emit(Op.GEMM, ["logits"], [xf, lw_])
+    b.emit(Op.FENCE)
+    b.close_block("head")
+
+    prog = b.build(artifacts)
+    if optimize:
+        prog = opt_mod.optimize(prog)
+    image = rimfs_mod.pack(files)
+    return prog, image

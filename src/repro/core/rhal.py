@@ -464,6 +464,13 @@ def make_eager_driver(device: Optional[jax.Device] = None,
         # dispatch asynchronously — the per-op host sync of the interpreted
         # eager path is replaced by syncs at FENCE ops / program exit (the
         # paper's move: per-op fixed cost paid once per stream).
+        if op in oplib.OP_KERNELS:
+            # Kernel opcodes resolve through the registry so the linked
+            # handler picks up autotuned block params and the pallas→ref
+            # fallback ladder (kernels/registry.py); the registry's own
+            # wrappers are already jitted.
+            from repro.kernels import registry
+            return registry.linked_handler(oplib.OP_KERNELS[op], attrs)
         fn = oplib.lookup(op)
         return jax.jit(lambda *srcs: fn(srcs, attrs))
 
@@ -531,6 +538,9 @@ def make_trace_driver() -> HalDriver:
     def link_compute(op, attrs):
         # Under trace everything is symbolic already; the specialized
         # handler is just the pre-resolved oplib entry (no jit, no sync).
+        if op in oplib.OP_KERNELS:
+            from repro.kernels import registry
+            return registry.linked_handler(oplib.OP_KERNELS[op], attrs)
         fn = oplib.lookup(op)
         return lambda *srcs: fn(srcs, attrs)
 

@@ -53,6 +53,22 @@ def _align(n: int) -> int:
     return (n + ALIGN - 1) // ALIGN * ALIGN
 
 
+def _dtype_tag(dt: np.dtype) -> str:
+    """Wire tag for one file's dtype. Numpy's ``.str`` collapses extension
+    dtypes (ml_dtypes bfloat16 et al) to opaque void types (``|V2``), which
+    cannot round-trip — tag those by NAME instead (LM weight images ship
+    bfloat16)."""
+    return dt.name if dt.kind == "V" else dt.str
+
+
+def _dtype_of(tag: str) -> np.dtype:
+    try:
+        return np.dtype(tag)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, tag))
+
+
 def pack(files: Mapping[str, np.ndarray], *, version: int = 1) -> bytes:
     """Flatten named arrays into one RIMFS image."""
     index = []
@@ -71,7 +87,7 @@ def pack(files: Mapping[str, np.ndarray], *, version: int = 1) -> bytes:
             off = _align(off)
             out.append({
                 "name": name, "offset": off, "nbytes": int(arr.nbytes),
-                "dtype": arr.dtype.str, "shape": list(arr.shape),
+                "dtype": _dtype_tag(arr.dtype), "shape": list(arr.shape),
                 "crc32": zlib.crc32(arr.tobytes()) & 0xFFFFFFFF,
             })
             off += arr.nbytes
@@ -145,7 +161,7 @@ class RIMFS:
         if e is None:
             raise RIMFSError(f"no such file: {name!r}")
         view = np.frombuffer(
-            self._data, dtype=np.dtype(e["dtype"]),
+            self._data, dtype=_dtype_of(e["dtype"]),
             count=int(np.prod(e["shape"])) if e["shape"] else 1,
             offset=e["offset"]).reshape(e["shape"])
         check = self.verify_reads if verify is None else verify

@@ -567,6 +567,14 @@ class Platform:
                 # a poisoned weight image must never bind)
                 self.rimfs.fsck(strict=True)
                 self.events.post("rimfs_fsck", {"phase": "provision"})
+            # autotune-cache reload (DESIGN.md §13): an image carrying the
+            # kernel registry's winner table installs it now, so kernel
+            # handlers linked against this provision hit tuned block sizes
+            # with zero sweep trials.
+            from repro.kernels import registry as kreg
+            if kreg.AUTOTUNE_FILE in self.rimfs.files():
+                n = kreg.load_image(self.rimfs)
+                self.events.post("autotune_loaded", {"entries": n})
         if program_bytes is not None:
             program = RCBProgram.decode(program_bytes)
         if program is not None:

@@ -1,0 +1,47 @@
+"""Shared helpers for the kernel wrappers: backend resolution + contracts.
+
+``resolve_interpret`` is the ONE place the pallas ``interpret`` flag is
+decided, and it must be called OUTSIDE any jitted body: the flag is a
+static argument of every kernel wrapper, so resolving it inside a trace
+would bake whatever backend happened to be active at first trace into the
+cached executable (flipping backends later would silently replay the
+stale choice). The four ``ops.py`` wrappers resolve it eagerly and pass
+the concrete bool down to their jitted inner functions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# dtypes the pallas kernels accept for floating operands; everything else
+# is rejected with a ValueError by the shape contracts below.
+FLOAT_DTYPES = (jnp.dtype(jnp.float32), jnp.dtype(jnp.bfloat16),
+                jnp.dtype(jnp.float16))
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve the pallas ``interpret`` flag for the live backend.
+
+    ``None`` means "compiled on TPU, interpret-mode everywhere else".
+    Must be called from eager (non-traced) code — the result becomes a
+    static jit argument of the kernel wrappers.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def check_float_dtype(kernel: str, name: str, arr) -> None:
+    """Reject unsupported floating dtypes with a clear error."""
+    if jnp.dtype(arr.dtype) not in FLOAT_DTYPES:
+        raise ValueError(
+            f"{kernel}: operand {name!r} has unsupported dtype "
+            f"{arr.dtype}; supported: "
+            f"{', '.join(str(d) for d in FLOAT_DTYPES)}")
+
+
+def check_rank(kernel: str, name: str, arr, rank: int) -> None:
+    if arr.ndim != rank:
+        raise ValueError(
+            f"{kernel}: operand {name!r} must be rank-{rank}, got shape "
+            f"{tuple(arr.shape)}")

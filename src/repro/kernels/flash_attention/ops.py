@@ -2,6 +2,10 @@
 
 Handles layout (B,S,H,D) <-> kernel layout, GQA head grouping, head_dim
 padding to the 128-lane MXU width, and interpret-mode fallback on CPU.
+The shape/dtype contract is enforced eagerly (clear ``ValueError`` before
+any tracing); ``interpret`` is resolved OUTSIDE the jitted body
+(kernels/common.resolve_interpret) so it enters the trace as an
+already-concrete static flag.
 """
 from __future__ import annotations
 
@@ -10,22 +14,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import (check_float_dtype, check_rank,
+                                  resolve_interpret)
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
                                              "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128,
-                    interpret: bool | None = None) -> jax.Array:
-    """q: (B,S,H,D); k/v: (B,S,Hkv,D); returns (B,S,H,D)."""
-    if interpret is None:
-        interpret = not _on_tpu()
+def _flash_attention_jit(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool, block_q: int, block_k: int,
+                         interpret: bool) -> jax.Array:
     b, s, h, d = q.shape
     _, sk, hkv, _ = k.shape
     g = h // hkv
@@ -41,3 +39,38 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                              block_k=block_k, interpret=interpret)
     o = o.reshape(b, h, s, dp).transpose(0, 2, 1, 3)
     return o[..., :d]
+
+
+def check_contract(q, k, v) -> None:
+    """Shape/dtype contract shared with the kernel registry."""
+    for name, a in (("q", q), ("k", k), ("v", v)):
+        check_rank("flash_attention", name, a, 4)
+        check_float_dtype("flash_attention", name, a)
+    b, s, h, d = q.shape
+    bk, sk, hkv, dk = k.shape
+    if tuple(k.shape) != tuple(v.shape):
+        raise ValueError(
+            f"flash_attention: k/v shapes differ: {tuple(k.shape)} vs "
+            f"{tuple(v.shape)}")
+    if bk != b or dk != d:
+        raise ValueError(
+            f"flash_attention: q {tuple(q.shape)} and k {tuple(k.shape)} "
+            f"disagree on batch/head_dim")
+    if hkv == 0 or h % hkv != 0:
+        raise ValueError(
+            f"flash_attention: GQA grouping requires num_heads % "
+            f"num_kv_heads == 0, got h={h}, hkv={hkv}")
+    if s == 0 or sk == 0:
+        raise ValueError(
+            f"flash_attention: zero-length sequence (s={s}, s_kv={sk})")
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B,S,H,D); k/v: (B,S,Hkv,D); returns (B,S,H,D)."""
+    check_contract(q, k, v)
+    return _flash_attention_jit(q, k, v, causal=bool(causal),
+                                block_q=int(block_q), block_k=int(block_k),
+                                interpret=resolve_interpret(interpret))

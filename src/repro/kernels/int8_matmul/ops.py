@@ -1,4 +1,8 @@
-"""Jitted wrapper for the INT8 GEMM kernel."""
+"""Jitted wrapper for the INT8 GEMM kernel.
+
+The shape/dtype contract is enforced eagerly; ``interpret`` is resolved
+outside the jitted body (kernels/common.resolve_interpret).
+"""
 from __future__ import annotations
 
 import functools
@@ -6,16 +10,60 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import check_rank, resolve_interpret
 from repro.kernels.int8_matmul.kernel import int8_matmul_mkn
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
                                              "out_dtype", "interpret"))
-def int8_matmul(x, w, scale, *, block_m: int = 128, block_n: int = 128,
-                block_k: int = 128, out_dtype=jnp.float32,
-                interpret: bool | None = None) -> jax.Array:
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+def _int8_matmul_jit(x, w, scale, *, block_m: int, block_n: int,
+                     block_k: int, out_dtype, interpret: bool) -> jax.Array:
     return int8_matmul_mkn(x, w, scale, block_m=block_m, block_n=block_n,
                            block_k=block_k, out_dtype=out_dtype,
                            interpret=interpret)
+
+
+def check_contract(x, w, scale, *, block_m: int = 128, block_n: int = 128,
+                   block_k: int = 128) -> None:
+    """Shape/dtype contract shared with the kernel registry."""
+    check_rank("int8_matmul", "x", x, 2)
+    check_rank("int8_matmul", "w", w, 2)
+    check_rank("int8_matmul", "scale", scale, 1)
+    for name, a in (("x", x), ("w", w)):
+        if jnp.dtype(a.dtype) != jnp.int8:
+            raise ValueError(
+                f"int8_matmul: operand {name!r} must be int8, got {a.dtype}")
+    if not jnp.issubdtype(scale.dtype, jnp.floating):
+        raise ValueError(
+            f"int8_matmul: scale must be floating, got {scale.dtype}")
+    m, k = x.shape
+    kw, n = w.shape
+    if m == 0 or k == 0 or n == 0:
+        raise ValueError(
+            f"int8_matmul: zero-size operand (m={m}, k={k}, n={n})")
+    if kw != k:
+        raise ValueError(
+            f"int8_matmul: contraction mismatch x {tuple(x.shape)} vs "
+            f"w {tuple(w.shape)}")
+    if scale.shape[0] != n:
+        raise ValueError(
+            f"int8_matmul: scale must be per-out-channel (n={n},), got "
+            f"{tuple(scale.shape)}")
+    for dim, blk, name in ((m, block_m, "block_m"), (n, block_n, "block_n"),
+                           (k, block_k, "block_k")):
+        if dim % min(int(blk), dim) != 0:
+            raise ValueError(
+                f"int8_matmul: {name}={blk} does not tile dim {dim} "
+                f"(dims must be multiples of the clamped block size)")
+
+
+def int8_matmul(x, w, scale, *, block_m: int = 128, block_n: int = 128,
+                block_k: int = 128, out_dtype=jnp.float32,
+                interpret: bool | None = None) -> jax.Array:
+    """x: (M,K) int8; w: (K,N) int8; scale: (N,) f32. Returns (M,N)."""
+    check_contract(x, w, scale, block_m=block_m, block_n=block_n,
+                   block_k=block_k)
+    return _int8_matmul_jit(x, w, scale, block_m=int(block_m),
+                            block_n=int(block_n), block_k=int(block_k),
+                            out_dtype=jnp.dtype(out_dtype),
+                            interpret=resolve_interpret(interpret))

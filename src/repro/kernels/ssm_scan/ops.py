@@ -1,18 +1,59 @@
-"""Jitted wrapper for the selective-scan kernel (+ CPU interpret fallback)."""
+"""Jitted wrapper for the selective-scan kernel (+ CPU interpret fallback).
+
+The shape/dtype contract is enforced eagerly; ``interpret`` is resolved
+outside the jitted body (kernels/common.resolve_interpret).
+"""
 from __future__ import annotations
 
 import functools
 
 import jax
 
+from repro.kernels.common import (check_float_dtype, check_rank,
+                                  resolve_interpret)
 from repro.kernels.ssm_scan.kernel import ssm_scan_btdn
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "d_block", "interpret"))
+def _ssm_scan_jit(da, bx, c, *, chunk: int, d_block: int,
+                  interpret: bool) -> jax.Array:
+    return ssm_scan_btdn(da, bx, c, chunk=chunk, d_block=d_block,
+                         interpret=interpret)
+
+
+def check_contract(da, bx, c, *, chunk: int = 16,
+                   d_block: int = 256) -> None:
+    """Shape/dtype contract shared with the kernel registry."""
+    check_rank("ssm_scan", "da", da, 4)
+    check_rank("ssm_scan", "bx", bx, 4)
+    check_rank("ssm_scan", "c", c, 3)
+    for name, a in (("da", da), ("bx", bx), ("c", c)):
+        check_float_dtype("ssm_scan", name, a)
+    b, t, di, n = da.shape
+    if tuple(bx.shape) != tuple(da.shape):
+        raise ValueError(
+            f"ssm_scan: da/bx shapes differ: {tuple(da.shape)} vs "
+            f"{tuple(bx.shape)}")
+    if tuple(c.shape) != (b, t, n):
+        raise ValueError(
+            f"ssm_scan: c must be (B,T,N)=({b},{t},{n}), got "
+            f"{tuple(c.shape)}")
+    if t == 0:
+        raise ValueError("ssm_scan: zero-length sequence (t=0)")
+    if di == 0 or n == 0:
+        raise ValueError(f"ssm_scan: zero-size state (di={di}, n={n})")
+    if t % min(int(chunk), t) != 0:
+        raise ValueError(
+            f"ssm_scan: chunk={chunk} does not tile seq_len {t} "
+            f"(pad the sequence or pick a divisor)")
+    if di % min(int(d_block), di) != 0:
+        raise ValueError(
+            f"ssm_scan: d_block={d_block} does not tile d_inner {di}")
+
+
 def ssm_scan(da, bx, c, *, chunk: int = 16, d_block: int = 256,
              interpret: bool | None = None) -> jax.Array:
     """da/bx: (B,T,di,N) with da = per-step log-decay (<=0); c: (B,T,N)."""
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
-    return ssm_scan_btdn(da, bx, c, chunk=chunk, d_block=d_block,
-                         interpret=interpret)
+    check_contract(da, bx, c, chunk=chunk, d_block=d_block)
+    return _ssm_scan_jit(da, bx, c, chunk=int(chunk), d_block=int(d_block),
+                         interpret=resolve_interpret(interpret))

@@ -130,11 +130,13 @@ def _attend_full(cfg: ModelConfig, p: dict, q, k, v, out_dtype):
 
 
 def _attend_flash(cfg: ModelConfig, p: dict, q, k, v, out_dtype):
-    """Pallas flash-attention path (TPU; interpret-mode on CPU). Opt in via
-    AEG_ATTN_IMPL=flash — the jnp path remains the lowering default because
-    interpret-mode pallas_call is slow to trace at dry-run scale."""
-    from repro.kernels.flash_attention.ops import flash_attention
-    o = flash_attention(q, k, v, causal=True)
+    """Registry flash-attention path (pallas on TPU, interpret-mode on CPU,
+    ref fallback when pallas is unavailable) — the same handler the RCTC
+    lowering dispatches as ``Op.ATTENTION``. Opt in via AEG_ATTN_IMPL=flash
+    — the jnp path remains the default because interpret-mode pallas_call
+    is slow to trace at dry-run scale."""
+    from repro.kernels import registry
+    o = registry.call("attention", q, k, v, causal=True)
     B, S, H, D = o.shape
     o = shard(o, "batch", "seq", "heads", None)
     return jnp.einsum("bshd,hdk->bsk", o.astype(out_dtype), p["wo"])

@@ -4,9 +4,13 @@ Full-sequence processing scans over fixed-size chunks; inside a chunk the
 linear recurrence ``h_t = a_t * h_{t-1} + b_t`` runs as a log-depth
 ``associative_scan`` (small, statically-unrolled HLO). Decode is a single
 state update. The Pallas ``ssm_scan`` kernel implements the same chunked
-recurrence with VMEM tiling (kernels/ssm_scan).
+recurrence with VMEM tiling (kernels/ssm_scan); ``AEG_SSM_IMPL=kernel``
+routes the full-sequence scan through the kernel registry — the same
+handler the RCTC per-layer lowering dispatches as ``Op.SSM_SCAN``.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +20,10 @@ from repro.distributed.sharding import shard
 from repro.models.common import ParamSpec
 
 DT_RANK = 32
+
+
+def _ssm_impl() -> str:
+    return os.environ.get("AEG_SSM_IMPL", "jnp")
 
 
 def mamba_specs(cfg: ModelConfig) -> dict:
@@ -98,11 +106,60 @@ def ssm_chunked(u, dt, B_, C_, A, D, h0, chunk: int = 64):
     return y + u * D[None, None], h_final
 
 
+def ssm_kernel_inputs(cfg: ModelConfig, p: dict, x: jax.Array):
+    """Project x into the kernel-registry ``ssm_scan`` operand layout.
+
+    Returns (da_log (B,T,di,N) fp32 <= 0, bx (B,T,di,N) fp32, c (B,T,N)
+    fp32, u (B,T,di) fp32, z (B,T,di)) — the first three are exactly the
+    operands of ``Op.SSM_SCAN``; u/z feed the output stage (skip + gate).
+    Shared by the eager kernel route below and the RCTC per-layer glue.
+    """
+    u, z, dt, B_, C_ = _ssm_inputs(cfg, p, x)
+    A = -jnp.exp(p["m_alog"])
+    u32 = u.astype(jnp.float32)
+    da_log = dt[..., None] * A[None, None]            # (B,T,di,N)  <= 0
+    bx = (dt * u32)[..., None] * B_[:, :, None, :]    # (B,T,di,N)
+    return da_log, bx, C_, u32, z
+
+
+def ssm_output(cfg: ModelConfig, p: dict, y: jax.Array, u: jax.Array,
+               z: jax.Array, x_dtype) -> jax.Array:
+    """Skip connection + silu gate + output projection (shared tail)."""
+    y = y + u * p["m_d"][None, None]
+    y = y.astype(x_dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x_dtype)
+    y = shard(y, "batch", "seq", "mlp")
+    return jnp.einsum("btd,de->bte", y, p["m_out"])
+
+
+def ssm_core(u, dt, B_, C_, A, D, h0, impl: str | None = None):
+    """Full-sequence selective scan with impl routing. Returns (y, h_final)
+    where y already carries the ``u * D`` skip term.
+
+    ``impl``: "jnp" (chunked associative scan, default — differentiable) or
+    "kernel" (registry ``ssm_scan`` handler: pallas with interpret fallback,
+    ref fallback when pallas is unavailable). The kernel computes the
+    zero-state scan; h0 is folded in by seeding step 0's input with
+    ``exp(da_0) * h0`` and the final state recovered in closed form.
+    """
+    if (impl or _ssm_impl()) != "kernel":
+        return ssm_chunked(u, dt, B_, C_, A, D, h0)
+    from repro.kernels import registry
+    da_log = dt[..., None] * A[None, None]
+    bx = (dt * u)[..., None] * B_[:, :, None, :]
+    bx = bx.at[:, 0].add(jnp.exp(da_log[:, 0]) * h0)
+    y = registry.call("ssm_scan", da_log, bx, C_)
+    # closed-form final state: h_T = sum_t exp(P_T - P_t) * bx_t with
+    # P = inclusive cumsum of da_log (exp args <= 0 — overflow-safe).
+    P = jnp.cumsum(da_log, axis=1)
+    h_final = jnp.sum(jnp.exp(P[:, -1:] - P) * bx, axis=1)
+    return y + u * D[None, None], h_final
+
+
 def mamba_mix(cfg: ModelConfig, p: dict, x: jax.Array, h0: jax.Array):
     """Full-sequence Mamba branch. Returns (y, h_final)."""
     u, z, dt, B_, C_ = _ssm_inputs(cfg, p, x)
     A = -jnp.exp(p["m_alog"])
-    y, h1 = ssm_chunked(u.astype(jnp.float32), dt, B_, C_, A, p["m_d"], h0)
+    y, h1 = ssm_core(u.astype(jnp.float32), dt, B_, C_, A, p["m_d"], h0)
     y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
     y = shard(y, "batch", "seq", "mlp")
     return jnp.einsum("btd,de->bte", y, p["m_out"]), h1

@@ -5,9 +5,13 @@ The WKV core is computed in chunks: within a chunk the pairwise decay
 numerically safe for arbitrarily strong decay, unlike the classic
 ``exp(p) / exp(p)`` factorization which overflows. Chunks are carried by a
 ``lax.scan`` over an (B, H, K, K) state; this same algorithm is what the
-Pallas ``wkv6`` kernel tiles into VMEM (kernels/wkv6).
+Pallas ``wkv6`` kernel tiles into VMEM (kernels/wkv6). ``AEG_WKV_IMPL=kernel``
+routes the full-sequence recurrence through the kernel registry — the same
+handler the RCTC per-layer lowering dispatches as ``Op.WKV6``.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +21,10 @@ from repro.distributed.sharding import shard
 from repro.models.common import ParamSpec, group_norm
 
 LORA_DIM = 64
+
+
+def _wkv_impl() -> str:
+    return os.environ.get("AEG_WKV_IMPL", "jnp")
 
 
 def rwkv_specs(cfg: ModelConfig) -> dict:
@@ -122,9 +130,14 @@ def _decay(p: dict, xw: jax.Array) -> jax.Array:
     return -jnp.exp(w_raw)
 
 
-def time_mix(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array,
-             s0: jax.Array):
-    """RWKV6 attention replacement. Returns (y, new_ts, new_state)."""
+def time_mix_pre(cfg: ModelConfig, p: dict, x: jax.Array,
+                 ts_prev: jax.Array):
+    """Token-shift mixing + projections into the WKV operand layout.
+
+    Returns (r, k, v, lw — all (B,T,H,K) fp32, lw <= 0; g (B,T,d)) — the
+    first four are exactly the tensor operands of ``Op.WKV6``. Shared by
+    ``time_mix`` below and the RCTC per-layer glue artifact.
+    """
     B, T, d = x.shape
     K = cfg.rwkv_head_dim
     H = d // K
@@ -137,15 +150,51 @@ def time_mix(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array,
     v = jnp.einsum("btd,de->bte", xv, p["tm_wv"]).reshape(B, T, H, K)
     g = jnp.einsum("btd,de->bte", xg, p["tm_wg"])
     lw = _decay(p, xw).reshape(B, T, H, K)
+    return (r.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), lw, g)
 
-    y, s1 = wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
-                        v.astype(jnp.float32), lw,
-                        p["tm_u"].astype(jnp.float32), s0)
-    y = y.reshape(B, T, d).astype(x.dtype)
+
+def time_mix_post(cfg: ModelConfig, p: dict, y: jax.Array, g: jax.Array,
+                  x_dtype) -> jax.Array:
+    """Group-norm + silu gate + output projection (shared tail).
+    y: (B,T,H,K) fp32 WKV output; g: (B,T,d) gate projection."""
+    B, T, H, K = y.shape
+    y = y.reshape(B, T, H * K).astype(x_dtype)
     y = group_norm(y, p["tm_ln_w"], p["tm_ln_b"], H, cfg.norm_eps)
-    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x_dtype)
     y = shard(y, "batch", "seq", "heads")
-    return jnp.einsum("btd,de->bte", y, p["tm_wo"]), x[:, -1], s1
+    return jnp.einsum("btd,de->bte", y, p["tm_wo"])
+
+
+def wkv_core(r, k, v, lw, u, s0, impl: str | None = None):
+    """Full-sequence WKV recurrence with impl routing. Returns (y, s_final).
+
+    ``impl``: "jnp" (chunked scan, default — differentiable) or "kernel"
+    (registry ``wkv6`` handler). The kernel computes the zero-state
+    recurrence; an arbitrary entering state s0 is folded in exactly with
+    the rank-1 correction ``y += (r * exp(p_prev)) @ s0`` (p_prev the
+    exclusive decay prefix — exp args <= 0) and the final state recovered
+    in closed form.
+    """
+    if (impl or _wkv_impl()) != "kernel":
+        return wkv_chunked(r, k, v, lw, u, s0)
+    from repro.kernels import registry
+    y = registry.call("wkv6", r, k, v, lw, u)
+    p = jnp.cumsum(lw, axis=1)                              # inclusive
+    pprev = p - lw                                          # exclusive
+    y = y + jnp.einsum("bthi,bhio->btho", r * jnp.exp(pprev), s0)
+    s_final = jnp.exp(p[:, -1])[..., None] * s0 + \
+        jnp.einsum("bthi,btho->bhio", k * jnp.exp(p[:, -1:] - p), v)
+    return y, s_final
+
+
+def time_mix(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array,
+             s0: jax.Array):
+    """RWKV6 attention replacement. Returns (y, new_ts, new_state)."""
+    r, k, v, lw, g = time_mix_pre(cfg, p, x, ts_prev)
+    y, s1 = wkv_core(r, k, v, lw, p["tm_u"].astype(jnp.float32), s0)
+    y = time_mix_post(cfg, p, y, g, x.dtype)
+    return y, x[:, -1], s1
 
 
 def time_mix_step(cfg: ModelConfig, p: dict, x: jax.Array, ts_prev: jax.Array,
