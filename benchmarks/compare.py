@@ -144,6 +144,50 @@ def check_kernel_gates(new: dict) -> int:
     return warned
 
 
+def check_rollout_gates(new: dict) -> int:
+    """Warn-only gates over the safe-rollout & overload rows (ISSUE 10):
+    canary serving must stay bit-identical (wrong bytes never reach a
+    client), a partial reshape must move ZERO survivor weight bytes, and
+    the rollout chaos scenario must converge — both canaries decided
+    correctly, ladder walked back to rung 0, zero invariant violations.
+    Informational, never fails the build."""
+    warned = 0
+
+    def warn(name: str, msg: str) -> None:
+        nonlocal warned
+        warned += 1
+        print(f"::warning title=rollout gate::{name}: {msg}")
+
+    d = new.get("fleet/canary_overhead", {}).get("derived", "")
+    if d and "bit_identical=True" not in d:
+        warn("fleet/canary_overhead", "canary serving not bit-identical")
+    d = new.get("fleet/partial_reshape_ms", {}).get("derived", "")
+    if d:
+        if "survivors_zero_bytes=True" not in d:
+            warn("fleet/partial_reshape_ms",
+                 "partial reshape moved survivor weight bytes (gate: 0)")
+        if "bit_identical=True" not in d:
+            warn("fleet/partial_reshape_ms",
+                 "post-reshape responses not bit-identical")
+    d = new.get("overload/recovery_time", {}).get("derived", "")
+    if d:
+        if "recovered=True" not in d:
+            warn("overload/recovery_time",
+                 "brown-out ladder did not walk back to rung 0")
+        if "canary_good=promoted" not in d:
+            warn("overload/recovery_time",
+                 "good canary was not auto-promoted under chaos")
+        if "canary_bad=aborted" not in d:
+            warn("overload/recovery_time",
+                 "bad canary was not auto-aborted under chaos")
+        m = re.search(r"violations=(\d+)", d)
+        if m and int(m.group(1)) != 0:
+            warn("overload/recovery_time",
+                 f"{m.group(1)} rollout chaos invariant violations "
+                 f"(gate: 0)")
+    return warned
+
+
 def load(path: str) -> dict:
     try:
         with open(path) as f:
@@ -179,6 +223,7 @@ def main(argv=None) -> int:
     integrity_warnings = check_integrity_gates(new)
     lm_decode_warnings = check_lm_decode_gates(new)
     kernel_warnings = check_kernel_gates(new)
+    rollout_warnings = check_rollout_gates(new)
 
     regressed = improved = 0
     for name in sorted(set(old) & set(new)):
@@ -204,7 +249,8 @@ def main(argv=None) -> int:
           f"{fleet_warnings} fleet-gate warnings, "
           f"{integrity_warnings} integrity-gate warnings, "
           f"{lm_decode_warnings} lm_decode-gate warnings, "
-          f"{kernel_warnings} kernel-gate warnings "
+          f"{kernel_warnings} kernel-gate warnings, "
+          f"{rollout_warnings} rollout-gate warnings "
           f"(threshold +{args.threshold:.0%}, warn-only)")
     return 0                             # NEVER fails the build
 

@@ -976,11 +976,8 @@ def integrity_bench(iters: int = 200, rng=None) -> None:
 # Fleet operations: scale cycle + hot swap + kill/heal under live traffic
 # ---------------------------------------------------------------------------
 
-def fleet_operations_bench(quick: bool = False) -> None:
-    """One seeded chaos scenario (tests/chaos.py): a 2 -> peak -> 2 scale
-    cycle, a hot weight swap, a forced bad swap and a tile-group kill all
-    land mid-traffic; the rows carry the robustness gate — zero failed
-    requests, bit-identical responses, bounded p99."""
+def _load_chaos():
+    """Load tests/chaos.py as a module (it lives outside the package)."""
     import importlib.util
     import pathlib
     path = pathlib.Path(__file__).resolve().parent.parent / "tests" / \
@@ -988,7 +985,15 @@ def fleet_operations_bench(quick: bool = False) -> None:
     spec = importlib.util.spec_from_file_location("chaos_bench", path)
     chaos = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(chaos)
+    return chaos
 
+
+def fleet_operations_bench(quick: bool = False) -> None:
+    """One seeded chaos scenario (tests/chaos.py): a 2 -> peak -> 2 scale
+    cycle, a hot weight swap, a forced bad swap and a tile-group kill all
+    land mid-traffic; the rows carry the robustness gate — zero failed
+    requests, bit-identical responses, bounded p99."""
+    chaos = _load_chaos()
     p99_bound_s = 30.0
     if quick:
         rep = chaos.run_chaos(groups=2, seed=7, requests=30, clients=2,
@@ -1017,6 +1022,89 @@ def fleet_operations_bench(quick: bool = False) -> None:
     emit("fleet/bad_swap_rollback", tm["swap_bad"] * 1e6,
          f"result={rep['bad_swap']} (conformance probe caught the "
          f"wrong weights; old binding kept serving)")
+
+
+def rollout_control_bench(quick: bool = False) -> None:
+    """Safe-rollout & overload control plane rows (ISSUE 10).
+
+    ``fleet/canary_overhead``: per-request cost of a fully-sampled
+    canary — fraction=1.0 + sample=1.0 means EVERY request dual-runs
+    primary + shadow and bit-compares, the worst-case tax; production
+    fractions pay it on the routed slice only. ``fleet/partial_reshape_
+    ms``: kill -> splice latency of replacing ONE tile group in place,
+    gated on zero survivor DMA bytes. ``overload/recovery_time``: the
+    rollout chaos scenario's burst -> ladder -> rung-0 walk-back, with
+    the scenario's full invariant checklist folded into the derived
+    column (compare.py check_rollout_gates, warn-only)."""
+    from repro.core.fleet import FleetController
+    from repro.serving.server import Client, InferenceServer
+
+    depth, n = (4, 16) if quick else (8, 24)
+    prog = rctc.compile_gemm_chain(depth, n)
+    files = rctc.gemm_chain_weights(depth, n)
+    image = rimfs.pack(files)
+    server = InferenceServer(mesh=rhal.TileMesh(4))
+    addr = server.start()
+    client = Client(addr)
+    try:
+        client.provision(image, prog.encode())
+        fleet = FleetController(server)
+        x = np.random.RandomState(0).randn(n, n).astype(np.float32)
+        ref = client.infer(input=x)
+        iters = 8 if quick else 16
+        t_plain = min(_time(lambda: client.infer(input=x), iters,
+                            warmup=2))
+        assert fleet.canary(image, fraction=1.0,
+                            label="bench") == "started"
+        t_can = min(_time(lambda: client.infer(input=x), iters,
+                          warmup=2))
+        fleet.abort_canary(reason="bench")
+        out = client.infer(input=x)
+        identical = all(np.array_equal(ref[k], out[k]) for k in ref)
+        emit("fleet/canary_overhead", (t_can - t_plain) * 1e6,
+             f"dual_run={t_can / t_plain:.2f}x vs primary-only per "
+             f"request (fraction=1.0, sample=1.0: every request "
+             f"bit-compared); bit_identical={identical}")
+
+        mesh = server.mesh
+        times = []
+        zero_bytes = True
+        for i in range(3 if quick else 5):
+            gid = 1 + (i % (mesh.n_groups - 1))
+            survivors = {g: mesh.group(g).driver.stats.get("dma_bytes", 0)
+                         for g in mesh.gids if g != gid}
+            mesh.kill(gid)
+            t0 = time.perf_counter()
+            fleet.replace_group(gid, reason="bench")
+            times.append(time.perf_counter() - t0)
+            zero_bytes &= all(
+                mesh.group(g).driver.stats.get("dma_bytes", 0) == b
+                for g, b in survivors.items())
+        out = client.infer(input=x)
+        identical = all(np.array_equal(ref[k], out[k]) for k in ref)
+        emit("fleet/partial_reshape_ms", min(times) * 1e6,
+             f"{min(times) * 1e3:.1f}ms kill->splice (fsck + spawn + "
+             f"one-group prewarm + CRC revalidate + install_group); "
+             f"survivors_zero_bytes={zero_bytes}; "
+             f"bit_identical={identical}")
+    finally:
+        client.close()
+        server.stop()
+
+    chaos = _load_chaos()
+    rep = chaos.run_rollout_chaos(groups=2, seed=7,
+                                  requests=60 if quick else 90,
+                                  clients=3)
+    violations = chaos.check_rollout_report(rep)
+    ov = rep["overload"]
+    rec = rep["timings"].get("overload_recovery", 0.0)
+    emit("overload/recovery_time", rec * 1e6,
+         f"burst->rung{ov['max_rung']}->rung{ov['final_rung']} "
+         f"recovered={ov['recovered']} breaker={ov['breaker']['state']} "
+         f"canary_good={rep.get('canary_good')} "
+         f"canary_bad={rep.get('canary_bad')} "
+         f"reshape={rep.get('reshape', {}).get('happened')} "
+         f"violations={len(violations)}")
 
 
 def main() -> None:
@@ -1054,6 +1142,7 @@ def main() -> None:
     lm_decode_sweep(emit, quick=quick)
     integrity_bench(iters=50 if quick else 200)
     fleet_operations_bench(quick=quick)
+    rollout_control_bench(quick=quick)
     kernel_microbench()
     with open(args.json, "w") as f:
         json.dump(RESULTS, f, indent=2, sort_keys=True)

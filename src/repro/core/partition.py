@@ -293,6 +293,22 @@ def prewarm(part: PartitionedProgram, mesh: TileMesh, rimfs=None) -> None:
 # The pipelined schedule driver
 # ---------------------------------------------------------------------------
 
+def prewarm_group(part: PartitionedProgram, driver, gid: int,
+                  rimfs=None) -> None:
+    """Bind + link ONE tile's subprogram against a replacement group's
+    driver (partial reshape): only the new driver's arena is populated —
+    surviving groups' residency, bind caches and DMA counters are never
+    touched, so replacing one straggler moves exactly one stage's weight
+    bytes and zero bytes for everyone else."""
+    from repro.core.executor import Executor   # local: avoids import cycle
+    base = part.bound.buffers
+    tile = part.tiles[gid]
+    bt = tile.bind(driver, rimfs,
+                   weights=None if rimfs is not None else
+                   {s: base[s] for s in tile.weight_syms if s in base})
+    Executor(driver=driver).link(bt)
+
+
 def execute(part: PartitionedProgram, mesh: TileMesh,
             inputs: Optional[dict] = None, rimfs=None,
             platform=None, stage_times: Optional[list] = None) -> dict:
@@ -340,6 +356,11 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
                     for k in ("dma_retry", "dma_crc_mismatch")} \
                 if platform is not None else None
             try:
+                # stage busy time starts at ticket redemption: a group
+                # whose inbound transfers stall (congested link, sick
+                # endpoint) is slow in a way its compute alone won't
+                # show — the fleet's straggler EWMA must see it
+                t0 = time.perf_counter()
                 stage_in = {s: feed[s] for s in tile.input_syms
                             if s in feed}
                 for sym in tile.cut_ins:
@@ -357,13 +378,13 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
                     # resolved the weights — reuse those buffers
                     weights=None if rimfs is not None else
                     {s: feed[s] for s in tile.weight_syms if s in feed})
-                t0 = time.perf_counter()
                 result = Executor(driver=group.driver).run(
                     bound_t, inputs=stage_in)
+                stage_dt = time.perf_counter() - t0
                 if stage_times is not None:
                     # per-stage busy time (occupancy accounting for the
                     # benchmark's bubble-fraction column)
-                    stage_times.append((gid, time.perf_counter() - t0))
+                    stage_times.append((gid, stage_dt))
                 if ist0 is not None:
                     # corruptions the driver caught + retried this stage
                     # surface as telemetry counters (DESIGN.md §11)
@@ -425,8 +446,11 @@ def execute(part: PartitionedProgram, mesh: TileMesh,
         if hb is not None:
             hb.beat(f"tile{gid}", stage_idx + 1)
         if platform is not None:
+            # per-group busy seconds feed the fleet controller's stage
+            # EWMA (straggler verdicts for partial reshapes, §14)
             platform.post("stage_complete",
-                          {"stage": stage_idx, "group": gid})
+                          {"stage": stage_idx, "group": gid,
+                           "seconds": stage_dt})
     return outs
 
 

@@ -613,6 +613,7 @@ class TileMesh:
             raise ValueError(f"need >= 1 tile group, got {n_groups}")
         factory = driver_factory or (
             lambda gid: make_eager_driver(arena_bytes=arena_bytes))
+        self._factory = factory        # retained for partial reshapes
         self.groups: list[TileGroup] = []
         for gid in range(n_groups):
             group = TileGroup(gid, factory(gid))
@@ -673,6 +674,31 @@ class TileMesh:
                         kind="residency_crc")
             arena.clear_quarantine()
         group.alive = True
+
+    def spawn_replacement(self, gid: int) -> TileGroup:
+        """Build (but do NOT install) a fresh guarded tile group for slot
+        ``gid`` — the expensive half of a *partial reshape*. The caller
+        binds / pins / links against the new group's driver off the
+        dispatcher thread, then splices it in with ``install_group``
+        between requests. The incumbent group keeps serving (or keeps
+        failing over) untouched until the splice."""
+        group = TileGroup(gid, self._factory(gid))
+        _guard_group(group)
+        return group
+
+    def install_group(self, group: TileGroup) -> TileGroup:
+        """Splice a replacement group into its slot, returning the
+        incumbent. O(1) pointer swap — the partial-reshape analogue of
+        the whole-mesh flip, intended to run as a dispatcher control op
+        so no stage is mid-flight across the swap. Surviving groups'
+        drivers (and their pinned weights and DMA counters) are not
+        touched."""
+        if not (0 <= group.gid < len(self.groups)):
+            raise ValueError(f"group gid {group.gid} outside mesh "
+                             f"[0, {len(self.groups)})")
+        old = self.groups[group.gid]
+        self.groups[group.gid] = group
+        return old
 
     @property
     def primary(self) -> HalDriver:

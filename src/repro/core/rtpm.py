@@ -108,6 +108,13 @@ class Telemetry:
     def record_latency(self, seconds: float) -> None:
         self._lat.append(seconds)
 
+    def count(self) -> int:
+        """Samples recorded so far (ring-capped). With ``summary(warmup=
+        prev_count)`` this gives windowed stats over only the samples
+        that landed since a controller's previous observation — the
+        brown-out ladder's queue-wait p99 signal."""
+        return len(self._lat)
+
     def record_dma(self, bytes_moved: int, bytes_overlapped: int = 0) -> None:
         """Data-movement accounting from the residency plan: total DMA
         payload vs the split-phase share that overlapped compute (the
@@ -549,7 +556,17 @@ class Platform:
                               ("watchdog_preempt", "watchdog_preemptions"),
                               ("dma_retry", "dma_retries"),
                               ("rimfs_fsck", "rimfs_fscks"),
-                              ("tile_failure", "tile_failures")):
+                              ("tile_failure", "tile_failures"),
+                              # safe-rollout / overload control plane
+                              # (DESIGN.md §14)
+                              ("canary_sample", "canary_samples"),
+                              ("canary_promoted", "canary_promotions"),
+                              ("canary_aborted", "canary_aborts"),
+                              ("reshape_complete", "partial_reshapes"),
+                              ("brownout_rung", "brownout_transitions"),
+                              ("brownout_shed", "brownout_sheds"),
+                              ("circuit_open", "circuit_opens"),
+                              ("circuit_closed", "circuit_closes")):
             self.events.register(
                 kind, lambda p, c=counter: self.telemetry.incr(
                     c, p.get("n", 1)))

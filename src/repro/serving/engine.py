@@ -25,7 +25,7 @@ from repro.launch.steps import make_decode_step, make_prefill_step, \
     sample_tokens
 from repro.models import transformer as tf
 from repro.models.common import init_params, is_spec
-from repro.serving.scheduler import ScheduledRequest
+from repro.serving.scheduler import ScheduledRequest, split_verdict
 
 
 def pack_params_image(params) -> bytes:
@@ -72,6 +72,8 @@ class Request:
     deadline: Optional[float] = None   # absolute monotonic seconds
     shed: bool = False            # shed by the admission policy
     verdict: str = ""             # admission outcome ("admitted"/"shed: ...")
+    verdict_kind: str = ""        # machine-readable shed kind
+                                  # (scheduler.VERDICT_KINDS)
 
 
 class EngineBase:
@@ -130,9 +132,10 @@ class EngineBase:
         """Next requests to place into free slots: scheduler admission
         (priority + EDF + shedding) when attached, FIFO otherwise.
 
-        ``feasible``: optional ``Request -> Optional[str]`` resource veto
-        (e.g. KV block budget). A verdict string sheds the request —
-        marked done with the verdict, zero compute spent — on both the
+        ``feasible``: optional resource veto (e.g. KV block budget)
+        returning ``None`` to admit, a verdict string, or a
+        ``(kind, message)`` tuple. A verdict sheds the request — marked
+        done with the typed verdict, zero compute spent — on both the
         scheduler and the FIFO path."""
         if self.scheduler is None:
             admitted = []
@@ -140,7 +143,9 @@ class EngineBase:
                 req = self._queue.pop(0)
                 verdict = feasible(req) if feasible is not None else None
                 if verdict:
-                    req.shed, req.verdict, req.done = True, verdict, True
+                    kind, msg = split_verdict(verdict)
+                    req.shed, req.done = True, True
+                    req.verdict, req.verdict_kind = msg, kind
                     continue
                 req.verdict = "admitted"
                 admitted.append(req)
@@ -153,11 +158,12 @@ class EngineBase:
                 s.payload.verdict = s.verdict
                 admitted.append(s.payload)
         for s in self.scheduler.drain_shed():
-            # shed == done, with a caller-observable verdict: the request
-            # never reaches a slot, so no compute is spent on it
+            # shed == done, with a caller-observable typed verdict: the
+            # request never reaches a slot, so no compute is spent on it
             r = s.payload
             if r is not None:
-                r.shed, r.verdict, r.done = True, s.verdict, True
+                r.shed, r.done = True, True
+                r.verdict, r.verdict_kind = s.verdict, s.verdict_kind
         return admitted
 
     def _sample(self, logits) -> np.ndarray:

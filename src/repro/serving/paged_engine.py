@@ -175,7 +175,8 @@ class PagedServingEngine(EngineBase):
                          self.max_seq)
             need = self.cache.blocks_needed(tokens)
             if need > budget:
-                return (f"shed: out of KV blocks (need {need}, free "
+                return ("out_of_blocks",
+                        f"shed: out of KV blocks (need {need}, free "
                         f"{budget} of {self.cache.num_blocks})")
             budget -= need
             return None

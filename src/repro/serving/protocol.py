@@ -53,6 +53,7 @@ MAX_FRAME = 64 << 20
 F_SHED = 1 << 0        # request shed by the admission policy (verdict in payload)
 F_BUSY = 1 << 1        # bounded dispatch queue full — backpressure, retry later
 F_DRAINING = 1 << 2    # server draining after SHUTDOWN; no new work accepted
+F_CANARY = 1 << 3      # response bytes produced by a canary shadow binding
 
 
 class Msg(enum.IntEnum):

@@ -49,15 +49,30 @@ from repro.core.integrity import IntegrityError
 from repro.core.rhal import TileFailure
 from repro.core.rtpm import Platform, ServiceLoop
 from repro.serving import protocol as proto
-from repro.serving.scheduler import DeadlineScheduler, ScheduledRequest
+from repro.serving.scheduler import (RETRYABLE_KINDS, DeadlineScheduler,
+                                     ScheduledRequest)
 
 
 class ServerBusy(RuntimeError):
-    """Reply carried F_BUSY/F_DRAINING: backpressure, retry later."""
+    """Reply carried F_BUSY/F_DRAINING: backpressure, retry later.
+
+    ``kind`` / ``retry_after_ms`` mirror the reply payload when the
+    server sent a structured refusal (v2 typed verdicts)."""
+    kind: str = "busy"
+    retry_after_ms: Optional[float] = None
+    retryable: bool = True
 
 
 class RequestShed(RuntimeError):
-    """Reply carried F_SHED: admission policy shed the request."""
+    """Reply carried F_SHED: admission policy shed the request.
+
+    ``kind`` is the machine-readable verdict class (busy / shed /
+    infeasible / out_of_blocks / brownout); ``retryable`` is False for
+    terminal verdicts (an infeasible deadline, or an LM request that
+    already sampled tokens and is no longer idempotent)."""
+    kind: str = "shed"
+    retry_after_ms: Optional[float] = None
+    retryable: bool = True
 
 
 class _Route:
@@ -173,6 +188,13 @@ class InferenceServer:
         self.batch_window = max(1, int(batch_window))
         self.batched_stats = {"dispatches": 0, "requests": 0,
                               "max_batch": 0}
+        # Canary A/B state (core.fleet.CanaryState), installed/cleared by
+        # the FleetController via control ops — dispatcher-owned, so the
+        # request path reads it without locks.
+        self.canary = None
+        # Brown-out rung 2 (serving.overload): admission-time clamp on LM
+        # max_new; None = no clamp. Dispatcher-owned like batch_window.
+        self.max_new_clamp: Optional[int] = None
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -293,9 +315,8 @@ class InferenceServer:
                         else proto.F_BUSY
                     route.send(
                         proto.Msg.ERROR,
-                        proto.pack_json(
-                            {"error": "busy: dispatch queue full",
-                             "pending": self._loop.depth()}),
+                        self._busy_payload("busy: dispatch queue full",
+                                           pending=self._loop.depth()),
                         rid=frame.request_id, flags=flags,
                         version=frame.version)
             except Exception as e:              # report, keep serving
@@ -325,17 +346,15 @@ class InferenceServer:
             if not self._loop.submit(_Work(frame, route, tensors=tensors,
                                            meta=admission)):
                 route.send(proto.Msg.ERROR,
-                           proto.pack_json(
-                               {"error": "busy: dispatch queue full"}),
+                           self._busy_payload("busy: dispatch queue full"),
                            rid=rid, flags=proto.F_BUSY, version=ver)
             return
 
         if self.scheduler.pending() >= self.max_queue:
             self._loop.reject()
             route.send(proto.Msg.ERROR,
-                       proto.pack_json(
-                           {"error": "busy: admission queue full",
-                            "pending": self.scheduler.pending()}),
+                       self._busy_payload("busy: admission queue full",
+                                          pending=self.scheduler.pending()),
                        rid=rid, flags=proto.F_BUSY, version=ver)
             return
         # the kick IS the admission ticket: an accepted kick guarantees a
@@ -347,8 +366,7 @@ class InferenceServer:
             flags = proto.F_DRAINING if self._stop.is_set() \
                 else proto.F_BUSY
             route.send(proto.Msg.ERROR,
-                       proto.pack_json({"error": "busy: dispatch queue "
-                                        "full"}),
+                       self._busy_payload("busy: dispatch queue full"),
                        rid=rid, flags=flags, version=ver)
             return
         self.scheduler.submit(ScheduledRequest(
@@ -386,6 +404,34 @@ class InferenceServer:
         if mesh is not None and gid is not None and mesh.alive(gid):
             mesh.kill(gid)
 
+    # ------------------------------------------------------ typed refusals
+    def _retry_after_ms(self) -> int:
+        """Server-side backpressure hint: roughly how long the current
+        backlog takes to drain at the admission EWMA's pace. Clients that
+        honor it (Client.retries) re-arrive when capacity plausibly
+        exists instead of hammering a saturated dispatcher."""
+        est = self.scheduler.est if self.scheduler.observations else 0.01
+        depth = self._loop.depth() + self.scheduler.pending()
+        return int(min(2000.0, max(1.0, est * (depth + 1) * 1000.0)))
+
+    def _shed_payload(self, kind: str, verdict: str,
+                      retryable: Optional[bool] = None) -> bytes:
+        """Machine-readable shed reply (DESIGN.md §14): ``kind`` tells
+        the client WHY (busy/shed/infeasible/out_of_blocks/brownout) so
+        it can distinguish retryable pressure from terminal verdicts."""
+        kind = kind or "shed"
+        if retryable is None:
+            retryable = kind in RETRYABLE_KINDS
+        return proto.pack_json(
+            {"error": "shed", "kind": kind, "verdict": verdict,
+             "retryable": bool(retryable),
+             "retry_after_ms": self._retry_after_ms() if retryable else 0})
+
+    def _busy_payload(self, msg: str, **extra) -> bytes:
+        return proto.pack_json(
+            {"error": msg, "kind": "busy", "retryable": True,
+             "retry_after_ms": self._retry_after_ms(), **extra})
+
     # ---------------------------------------------------------- dispatcher
     def _dispatch_one(self, work: _Work) -> None:
         """Runs ONLY on the ServiceLoop worker thread."""
@@ -421,8 +467,10 @@ class InferenceServer:
         one sample per stage), and the bound program must pass the batch
         analysis — otherwise batched dispatch would just serialize
         inside run_batched and inflate queue wait for nothing."""
+        # canary active: requests must route individually (the A/B split
+        # and per-request compare are defined per rid, not per batch)
         return (self.batch_window > 1 and self.mesh is None
-                and self._bound is not None
+                and self._bound is not None and self.canary is None
                 and linker_mod.batch_analysis(self._bound).batchable)
 
     @staticmethod
@@ -453,8 +501,7 @@ class InferenceServer:
             for s in self.scheduler.drain_shed():
                 r, srid, sver, _ = s.payload
                 r.send(proto.Msg.ERROR,
-                       proto.pack_json({"error": "shed",
-                                        "verdict": s.verdict}),
+                       self._shed_payload(s.verdict_kind, s.verdict),
                        rid=srid, flags=proto.F_SHED, version=sver)
                 progressed = True
             if not admitted:
@@ -475,6 +522,33 @@ class InferenceServer:
                     self._dispatch_batch(run)
                 progressed = True
 
+    def _execute_request(self, tensors: dict, rid: int) -> tuple:
+        """One plain-RCB execution, canary-aware. Returns (out, flags).
+
+        With a canary installed, a hash-routed fraction of requests runs
+        on the shadow binding; a sampled subset of those ALSO runs the
+        primary and bit-compares, feeding the SPRT an agree/disagree
+        observation. A sampled disagreement is answered with the
+        PRIMARY's bytes — the canary never serves a byte it has been
+        caught getting wrong. Shadow-served replies carry F_CANARY."""
+        canary = self.canary
+        if canary is None or not canary.routes(rid):
+            return self._infer(tensors), 0
+        canary.stats["routed"] += 1
+        shadow_out = self._infer(tensors, bound=canary.bound, fs=canary.fs)
+        if canary.samples(rid):
+            primary_out = self._infer(tensors)
+            agree = canary.judge(primary_out, shadow_out)
+            canary.record(agree)
+            self.platform.post("canary_sample",
+                               {"rid": rid, "agree": agree})
+            if not (agree and canary.serve_shadow):
+                return primary_out, 0
+        elif not canary.serve_shadow:
+            return self._infer(tensors), 0
+        canary.stats["served_shadow"] += 1
+        return shadow_out, proto.F_CANARY
+
     def _dispatch_single(self, s) -> None:
         r, srid, sver, sts = s.payload
         wd = self._loop.watchdog
@@ -484,7 +558,7 @@ class InferenceServer:
             if wd is not None:
                 wd.arm(s)
             try:
-                out = self._infer(sts)
+                out, oflags = self._execute_request(sts, srid)
             except (TileFailure, IntegrityError) as e:
                 # recoverable fault taxonomy (DESIGN.md §11): one re-run
                 # on healthy resources — the dead group is excluded by
@@ -496,7 +570,7 @@ class InferenceServer:
                                           "error": str(e)})
                 if wd is not None:
                     wd.arm(s)           # fresh budget for the re-run
-                out = self._infer(sts)
+                out, oflags = self._execute_request(sts, srid)
         except Exception as e:                  # report, keep draining
             r.send_final(s, proto.Msg.ERROR,
                          proto.pack_json({"error": str(e)}),
@@ -510,7 +584,7 @@ class InferenceServer:
         self.platform.telemetry.record_latency(dt)
         self.scheduler.observe_step_latency(dt)
         r.send_final(s, proto.Msg.INFER_RESPONSE, proto.pack_tensors(out),
-                     rid=srid, version=sver)
+                     rid=srid, version=sver, flags=oflags)
 
     def _dispatch_batch(self, run: list) -> None:
         """One coalesced dispatch for a same-signature request run.
@@ -576,12 +650,16 @@ class InferenceServer:
         if len(self._inflight) >= self.max_queue:
             self._loop.reject()
             route.send(proto.Msg.ERROR,
-                       proto.pack_json(
-                           {"error": "busy: too many in-flight prompts",
-                            "inflight": len(self._inflight)}),
+                       self._busy_payload(
+                           "busy: too many in-flight prompts",
+                           inflight=len(self._inflight)),
                        rid=rid, flags=proto.F_BUSY, version=ver)
             return
         max_new = work.meta["max_new"]
+        if self.max_new_clamp is not None:
+            # brown-out rung 2: bound every admission's decode budget so
+            # a queue of long generations can't starve the fleet
+            max_new = min(max_new, self.max_new_clamp)
         prompt = np.asarray(work.tensors["prompt"]).astype(
             np.int32).reshape(-1)
         if prompt.size + max_new >= self.engine.max_seq:
@@ -687,9 +765,15 @@ class InferenceServer:
                 continue
             self._inflight.pop(iid, None)
             if req.shed:
+                # idempotency cap: an LM request that already sampled
+                # tokens is NOT safe to blind-retry (a re-run would draw
+                # fresh samples) — admission-time sheds always are
+                kind = req.verdict_kind
+                retryable = kind in RETRYABLE_KINDS and \
+                    not req.out_tokens
                 route.send(proto.Msg.ERROR,
-                           proto.pack_json({"error": "shed",
-                                            "verdict": req.verdict}),
+                           self._shed_payload(kind, req.verdict,
+                                              retryable=retryable),
                            rid=rid, flags=proto.F_SHED, version=ver)
             else:
                 route.send(proto.Msg.INFER_RESPONSE,
@@ -726,16 +810,19 @@ class InferenceServer:
             self.platform.program.artifacts.update(self.artifacts)
         self._bound = self.platform.bind()
 
-    def _infer(self, tensors: dict) -> dict:
-        if self._bound is None:
+    def _infer(self, tensors: dict, bound=None, fs=None) -> dict:
+        """Execute on the primary binding, or — when the fleet layer
+        passes a (bound, fs) pair — on a canary shadow binding."""
+        if bound is None:
+            bound, fs = self._bound, self.platform.rimfs
+        if bound is None:
             raise RuntimeError("not provisioned")
         if self.mesh is not None:
             out = self.executor.run_partitioned(
-                self._bound, inputs=tensors, rimfs=self.platform.rimfs,
+                bound, inputs=tensors, rimfs=fs,
                 mesh=self.mesh, platform=self.platform)
         else:
-            out = self.executor.run(self._bound, inputs=tensors,
-                                    rimfs=self.platform.rimfs)
+            out = self.executor.run(bound, inputs=tensors, rimfs=fs)
         return {k: np.asarray(v) for k, v in out.items()}
 
 
@@ -769,7 +856,8 @@ class Client:
         self.backoff = backoff
         self.backoff_cap = backoff_cap
         self._retry_rng = random.Random(retry_seed)
-        self.retry_stats = {"retries": 0, "busy": 0, "shed": 0}
+        self.retry_stats = {"retries": 0, "busy": 0, "shed": 0,
+                            "hinted": 0}
         self._send_lock = threading.Lock()
         self._cond = threading.Condition()
         self._parked: dict = {}           # rid -> Frame (out-of-order)
@@ -850,10 +938,16 @@ class Client:
         info = proto.unpack_json(f.payload)
         msg = info.get("error", str(info))
         if f.flags & proto.F_SHED:
-            raise RequestShed(info.get("verdict", msg))
-        if f.flags & (proto.F_BUSY | proto.F_DRAINING):
-            raise ServerBusy(msg)
-        raise RuntimeError(msg)
+            exc: Any = RequestShed(info.get("verdict", msg))
+            exc.kind = info.get("kind", "shed")
+        elif f.flags & (proto.F_BUSY | proto.F_DRAINING):
+            exc = ServerBusy(msg)
+            exc.kind = info.get("kind", "busy")
+        else:
+            raise RuntimeError(msg)
+        exc.retry_after_ms = info.get("retry_after_ms")
+        exc.retryable = bool(info.get("retryable", True))
+        raise exc
 
     def _rpc(self, kind: proto.Msg, payload: bytes) -> proto.Frame:
         rid = next(self._rids)
@@ -887,14 +981,18 @@ class Client:
                    proto.pack_tensors({**tensors, **meta}), rid=rid)
         return rid
 
-    def result(self, rid: int, timeout: Optional[float] = None) -> dict:
+    def result(self, rid: int, timeout: Optional[float] = None,
+               with_flags: bool = False):
         """Collect the response for a pipelined request id (any order).
         ``timeout`` raises ``TimeoutError`` for an orphaned id (e.g. a
-        dead server that will never answer) instead of parking forever."""
+        dead server that will never answer) instead of parking forever.
+        ``with_flags=True`` returns ``(tensors, flags)`` so callers can
+        see reply metadata such as F_CANARY (shadow-served bytes)."""
         f = self._await(rid, timeout=timeout)
         if f.kind == proto.Msg.ERROR:
             self._raise_error(f)
-        return proto.unpack_tensors(f.payload)
+        out = proto.unpack_tensors(f.payload)
+        return (out, f.flags) if with_flags else out
 
     def infer(self, deadline_ms: Optional[float] = None,
               priority: Optional[int] = None,
@@ -912,10 +1010,22 @@ class Client:
             except (ServerBusy, RequestShed) as e:
                 kind = "busy" if isinstance(e, ServerBusy) else "shed"
                 self.retry_stats[kind] += 1
+                if not getattr(e, "retryable", True):
+                    # terminal verdict (infeasible deadline, or a non-
+                    # idempotent mid-sampling shed): retrying is either
+                    # futile or unsafe — fail fast regardless of budget
+                    raise
                 if attempt >= self.retries:
                     raise
                 delay = min(self.backoff_cap, self.backoff * (2 ** attempt))
-                time.sleep(delay * (0.5 + self._retry_rng.random() / 2))
+                delay *= 0.5 + self._retry_rng.random() / 2
+                hint = getattr(e, "retry_after_ms", None)
+                if hint:
+                    # the server told us when capacity plausibly exists;
+                    # arriving earlier only burns a retry on the same wall
+                    self.retry_stats["hinted"] += 1
+                    delay = max(delay, float(hint) / 1e3)
+                time.sleep(delay)
                 attempt += 1
                 self.retry_stats["retries"] += 1
 

@@ -55,6 +55,23 @@ def delay_dma(mesh, gid: int, seconds: float):
     return lambda: setattr(driver, "dma_async", orig)
 
 
+def slow_group_redeem(mesh, gid: int, seconds: float):
+    """Fault: stall one group's inbound ticket redemption by ``seconds``
+    per transfer (a congested link INTO the group, or a throttled
+    endpoint). Unlike ``delay_dma`` this lands inside the stage-busy
+    window, so the fleet controller's per-group stage EWMA sees the
+    group as a straggler. Returns an undo callable."""
+    driver = mesh.group(gid).driver
+    orig = driver.dma_wait
+
+    def slow(ticket):
+        time.sleep(seconds)
+        return orig(ticket)
+
+    driver.dma_wait = slow
+    return lambda: setattr(driver, "dma_wait", orig)
+
+
 def corrupt_dma_payload(mesh, gid: int, count: int = 3):
     """Fault: flip one bit in the device-side payload of the next
     ``count`` CRC-stamped transfers landing on one group (a flaky
@@ -255,13 +272,14 @@ def run_chaos(groups: int = 2, seed: int = 7, requests: int = 90,
         server.mesh.kill(kill_gid)          # in-flight stages fail over
         report["faults"].append(f"kill_g{kill_gid}")
         t_kill = time.perf_counter()
-        for _ in range(20):                 # converge: tick until healed
-            rep = fleet.tick()
-            if any(k == "heal_complete" for k, _ in fleet.events):
+        for _ in range(20):                 # converge: tick until repaired
+            rep = fleet.tick()              # (partial reshape for a single
+            if any(k in ("heal_complete", "reshape_complete")
+                   for k, _ in fleet.events):   # dead group, heal for more)
                 break
             time.sleep(0.02)
         report["timings"]["kill_to_heal"] = time.perf_counter() - t_kill
-        log("healed")
+        log("repaired")
 
         wait_frac(0.33)
         log("journaled install: fault at every mid-write point, fsck "
@@ -441,10 +459,13 @@ def check_report(report: dict) -> list:
     if not report.get("crc_fault_contained"):
         bad.append("CRC corruption was not contained")
     ev = report["events"]
-    for needed in ("scale_complete", "heal_complete", "swap_committed",
+    for needed in ("scale_complete", "swap_committed",
                    "swap_probed", "swap_rolled_back"):
         if needed not in ev:
             bad.append(f"missing fleet event {needed!r}")
+    if "heal_complete" not in ev and "reshape_complete" not in ev:
+        bad.append("no repair event: neither heal_complete nor "
+                   "reshape_complete")
     if report["p99_s"] > report["p99_bound_s"]:
         bad.append(f"p99 {report['p99_s']:.3f}s past bound "
                    f"{report['p99_bound_s']:.3f}s")
@@ -471,8 +492,357 @@ def check_report(report: dict) -> list:
     return bad
 
 
+def run_rollout_chaos(groups: int = 2, seed: int = 7, requests: int = 96,
+                      clients: int = 3, depth: int = 8, n: int = 24,
+                      retries: int = 10, slow_s: float = 0.15,
+                      burst: int = 48, p99_bound_s: float = 30.0,
+                      pace_s: float = 0.03,
+                      verbose: bool = False) -> dict:
+    """Safe-rollout & overload chaos scenario (ISSUE 10):
+
+      * ``canary_good``  — canary an identical-weights repack; the SPRT
+        must auto-promote it mid-traffic with zero mismatched responses.
+      * ``canary_bad``   — canary WRONG weights; the SPRT must auto-
+        abort, every sampled disagreement answered with primary bytes
+        (zero wrong bytes reach any client).
+      * ``slow_group``   — stall one group's inbound redemption; the
+        stage-EWMA straggler verdict must partial-reshape exactly that
+        group (survivor drivers untouched) without dropping a request.
+      * ``overload_burst`` — a low-priority flood; the brown-out ladder
+        must engage, every refusal carry a typed verdict kind, the
+        scripted failing group get circuit-broken and probed back, and
+        the ladder walk back to rung 0 after the burst drains.
+    """
+    from repro.serving.overload import BrownoutController, OverloadConfig
+    from repro.serving.scheduler import VERDICT_KINDS
+    from repro.serving.server import RequestShed, ServerBusy
+
+    rng = np.random.RandomState(seed)
+    prog = rctc.compile_gemm_chain(depth, n)
+    files = rctc.gemm_chain_weights(depth, n)
+    image = rimfs.pack(files)
+    pool = [rng.randn(n, n).astype(np.float32) for _ in range(8)]
+    fs = rimfs.mount(image)
+    refs = []
+    for x in pool:
+        out = Executor().run(rbl.bind(prog, rimfs=fs, inputs={"input": x}))
+        refs.append({k: np.asarray(v) for k, v in out.items()})
+
+    server = InferenceServer(mesh=rhal.TileMesh(groups), max_queue=256)
+    addr = server.start()
+    boot = Client(addr)
+    boot.provision(image, prog.encode())
+    boot.close()
+
+    # stage_straggler_ratio must clear the mesh's NATURAL stage imbalance
+    # (an 8-way pipeline runs its heaviest stage at 10-30x the median
+    # busy time) while still catching the scripted slow_s stall, which
+    # lands at 100x+ the median — 50x separates the two cleanly at every
+    # matrix mesh size
+    fleet_cfg = FleetConfig(scale_up_depth=10 ** 6, scale_down_depth=-1,
+                            straggler_ticks=2, stage_straggler_ratio=50.0)
+    fleet = FleetController(server, fleet_cfg)
+    over = BrownoutController(server, OverloadConfig(
+        p99_high=0.05, min_window=2, escalate_ticks=1, recover_ticks=2,
+        shed_priority=2, breaker_cooldown_ticks=1))
+
+    done = threading.Event()
+    counters = {"sent": 0, "ok": 0, "mismatch": 0}
+    failures: list = []
+    latencies: list = []
+    lock = threading.Lock()
+    per_client = requests // clients
+
+    def traffic(cid: int) -> None:
+        cl = Client(addr, retries=retries, backoff=0.02,
+                    retry_seed=seed * 1000 + cid)
+        try:
+            for i in range(per_client):
+                j = (cid * per_client + i) % len(pool)
+                with lock:
+                    counters["sent"] += 1
+                t0 = time.perf_counter()
+                try:
+                    out = cl.infer(input=pool[j], priority=0)
+                except Exception as e:
+                    with lock:
+                        failures.append(f"client{cid} req{i}: {e!r}")
+                    continue
+                dt = time.perf_counter() - t0
+                ident = set(out) == set(refs[j]) and all(
+                    np.array_equal(out[k], refs[j][k]) for k in refs[j])
+                with lock:
+                    latencies.append(dt)
+                    counters["ok" if ident else "mismatch"] += 1
+                time.sleep(pace_s)
+        finally:
+            cl.close()
+
+    threads = [threading.Thread(target=traffic, args=(c,), daemon=True)
+               for c in range(clients)]
+    for t in threads:
+        t.start()
+
+    total = per_client * clients
+    report: dict = {"schedule": {"seed": seed, "groups": groups},
+                    "faults": [], "timings": {}}
+
+    def completed() -> int:
+        with lock:
+            return counters["ok"] + counters["mismatch"] + len(failures)
+
+    def wait_frac(frac: float, timeout: float = 120.0,
+                  tick_overload: bool = False) -> None:
+        deadline = time.monotonic() + timeout
+        while completed() < int(total * frac):
+            if time.monotonic() > deadline or done.is_set():
+                return
+            fleet.tick()
+            if tick_overload:
+                over.tick()
+            time.sleep(0.02)
+
+    def log(msg: str) -> None:
+        if verbose:
+            print(f"[rollout {completed():3d}/{total}] {msg}", flush=True)
+
+    def tick_until(pred, limit: int = 400, overload: bool = False,
+                   fleet_ticks: bool = True):
+        # fleet_ticks=False while the breaker owns a group: the fleet's
+        # dead-group replace policy must not race the circuit's
+        # kill/probe/revive cycle
+        for _ in range(limit):
+            if fleet_ticks:
+                fleet.tick()
+            if overload:
+                over.tick()
+            if pred():
+                return True
+            time.sleep(0.02)
+        return pred()
+
+    undo_slow = None
+    try:
+        # ---------------------------------------------- canary_good
+        wait_frac(0.08)
+        log("canary GOOD image (identical weights repack)")
+        t0 = time.perf_counter()
+        started = fleet.canary(rimfs.pack(files), fraction=0.5,
+                               label="good")
+        report["canary_good_started"] = started
+        promoted = tick_until(lambda: any(
+            k == "canary_promoted" for k, _ in fleet.events))
+        report["timings"]["canary_to_promote"] = time.perf_counter() - t0
+        report["canary_good"] = "promoted" if promoted else "undecided"
+        good_ev = [p for k, p in fleet.events if k == "canary_promoted"]
+        if good_ev:
+            report["canary_good_stats"] = good_ev[-1].get("stats")
+        report["faults"].append("canary_good")
+        log(f"promoted: {promoted}")
+
+        # ----------------------------------------------- canary_bad
+        wait_frac(0.30)
+        log("canary BAD image (wrong weights — SPRT must abort)")
+        bad_files = rctc.gemm_chain_weights(depth, n, seed=seed + 1)
+        started = fleet.canary(rimfs.pack(bad_files), fraction=0.5,
+                               label="bad")
+        report["canary_bad_started"] = started
+        aborted = tick_until(lambda: any(
+            k == "canary_aborted" for k, _ in fleet.events))
+        report["canary_bad"] = "aborted" if aborted else "undecided"
+        bad_ev = [p for k, p in fleet.events if k == "canary_aborted"]
+        if bad_ev:
+            report["canary_bad_stats"] = bad_ev[-1].get("stats")
+        report["faults"].append("canary_bad_image")
+        log(f"aborted: {aborted}")
+
+        # ------------------------------------------------ slow_group
+        wait_frac(0.45)
+        slow_gid = 1 if groups > 1 else 0
+        mesh_before = server.mesh
+        peers = {g: mesh_before.group(g).driver
+                 for g in mesh_before.gids if g != slow_gid}
+        old_driver = mesh_before.group(slow_gid).driver
+        log(f"slow group {slow_gid}: stalled redemption {slow_s}s")
+        undo_slow = slow_group_redeem(server.mesh, slow_gid, slow_s)
+        report["faults"].append("slow_group")
+        t0 = time.perf_counter()
+        # count from a baseline: a reshape that predates this fault (for
+        # any reason) must not satisfy the straggler-replacement wait
+        n_reshapes = sum(1 for k, _ in fleet.events
+                         if k == "reshape_complete")
+        reshaped = tick_until(lambda: sum(
+            1 for k, _ in fleet.events
+            if k == "reshape_complete") > n_reshapes)
+        if undo_slow is not None:
+            undo_slow()
+            undo_slow = None
+        report["timings"]["slow_to_reshape"] = time.perf_counter() - t0
+        report["reshape"] = {
+            "happened": reshaped,
+            "same_mesh": server.mesh is mesh_before,
+            "replaced_driver_changed":
+                server.mesh.group(slow_gid).driver is not old_driver,
+            "survivors_untouched": all(
+                server.mesh.group(g).driver is d
+                for g, d in peers.items()),
+            "log": [(p.get("group"), p.get("reason"))
+                    for k, p in fleet.events if k == "reshape_complete"],
+        }
+        log(f"reshaped: {report['reshape']}")
+
+        # -------------------------------------------- overload_burst
+        wait_frac(0.60)
+        log(f"overload burst: {burst} low-priority requests + scripted "
+            f"failing group")
+        # scripted flaky group for the rung-4 circuit breaker
+        flaky_gid = 0
+        for _ in range(3):
+            server.platform.post("tile_failure",
+                                 {"group": flaky_gid, "stage": 0})
+        shed_kinds: list = []
+        burst_ok = [0]
+
+        def burst_traffic(bid: int) -> None:
+            cl = Client(addr, retry_seed=seed * 77 + bid)
+            try:
+                for i in range(burst // 6):
+                    try:
+                        cl.infer(input=pool[(bid + i) % len(pool)],
+                                 priority=3)
+                        with lock:
+                            burst_ok[0] += 1
+                    except (RequestShed, ServerBusy) as e:
+                        with lock:
+                            shed_kinds.append(getattr(e, "kind", ""))
+                    except Exception:
+                        with lock:
+                            shed_kinds.append("")
+            finally:
+                cl.close()
+
+        bt = [threading.Thread(target=burst_traffic, args=(b,),
+                               daemon=True) for b in range(6)]
+        t0 = time.perf_counter()
+        for t in bt:
+            t.start()
+        max_rung = [0]
+
+        def pump_burst():
+            over.tick()
+            max_rung[0] = max(max_rung[0], over.rung)
+            return not any(t.is_alive() for t in bt)
+
+        tick_until(pump_burst, limit=800, fleet_ticks=False)
+        for t in bt:
+            t.join(timeout=60)
+        # let the ladder walk back down with hysteresis and the breaker
+        # probe its quarantined group back in (fleet ticks parked: the
+        # replace policy must not race the circuit's kill/revive cycle)
+        recovered = tick_until(
+            lambda: over.rung == 0 and over.breaker.state == "closed",
+            limit=800, overload=True, fleet_ticks=False)
+        report["timings"]["overload_recovery"] = time.perf_counter() - t0
+        report["overload"] = {
+            "max_rung": max_rung[0], "final_rung": over.rung,
+            "recovered": recovered,
+            "burst_ok": burst_ok[0], "burst_shed": len(shed_kinds),
+            "shed_kinds": sorted(set(shed_kinds)),
+            "untyped_sheds": sum(1 for k in shed_kinds
+                                 if k not in VERDICT_KINDS),
+            "breaker": dict(over.breaker.stats,
+                            state=over.breaker.state),
+            "summary": over.summary(),
+        }
+        report["faults"].append("overload_burst")
+        log(f"overload: {report['overload']}")
+
+        for t in threads:
+            t.join(timeout=180)
+        done.set()
+    finally:
+        if undo_slow is not None:
+            undo_slow()
+        fleet.stop()
+        over.stop()
+        server.stop()
+
+    report.update({
+        "sent": counters["sent"], "ok": counters["ok"],
+        "failed": len(failures), "failures": failures[:10],
+        "mismatches": counters["mismatch"],
+        "p50_s": _percentile(latencies, 0.50),
+        "p99_s": _percentile(latencies, 0.99),
+        "p99_bound_s": p99_bound_s,
+        "events": [k for k, _ in fleet.events] +
+        [k for k, _ in over.events],
+        "fleet": fleet.summary(),
+        "counters": server.platform.telemetry.counters(),
+    })
+    return report
+
+
+def check_rollout_report(report: dict) -> list:
+    """Invariants for the safe-rollout scenario (empty == converged)."""
+    bad = []
+    if report["failed"]:
+        bad.append(f"{report['failed']} failed requests: "
+                   f"{report['failures']}")
+    if report["mismatches"]:
+        bad.append(f"{report['mismatches']} non-bit-identical responses "
+                   "(a canary served wrong bytes?)")
+    if report["ok"] != report["sent"]:
+        bad.append(f"ok {report['ok']} != sent {report['sent']}")
+    if report.get("canary_good") != "promoted":
+        bad.append(f"good canary not promoted: {report.get('canary_good')}")
+    if report.get("canary_bad") != "aborted":
+        bad.append(f"bad canary not aborted: {report.get('canary_bad')}")
+    bstats = report.get("canary_bad_stats") or {}
+    if bstats.get("served_shadow", 0):
+        bad.append(f"bad canary served {bstats['served_shadow']} shadow "
+                   "responses")
+    rs = report.get("reshape", {})
+    if not rs.get("happened"):
+        bad.append("slow group never partial-reshaped")
+    if not rs.get("same_mesh"):
+        bad.append("partial reshape rebuilt the mesh instead of splicing")
+    if not rs.get("replaced_driver_changed"):
+        bad.append("straggler group's driver not replaced")
+    if not rs.get("survivors_untouched"):
+        bad.append("partial reshape touched a surviving group's driver")
+    ov = report.get("overload", {})
+    if ov.get("max_rung", 0) < 1:
+        bad.append("overload burst never engaged the brown-out ladder")
+    if ov.get("final_rung") != 0 or not ov.get("recovered"):
+        bad.append(f"ladder did not walk back to rung 0: {ov}")
+    if ov.get("untyped_sheds"):
+        bad.append(f"{ov['untyped_sheds']} sheds carried no typed "
+                   f"verdict kind (kinds seen: {ov.get('shed_kinds')})")
+    if ov.get("burst_shed", 0) + ov.get("burst_ok", 0) == 0:
+        bad.append("overload burst sent no traffic")
+    ev = report["events"]
+    for needed in ("canary_started", "canary_promoted", "canary_aborted",
+                   "reshape_started", "reshape_complete"):
+        if needed not in ev:
+            bad.append(f"missing rollout event {needed!r}")
+    if ov.get("max_rung", 0) >= 4:
+        br = ov.get("breaker", {})
+        if not br.get("trips"):
+            bad.append("rung 4 reached but the breaker never tripped")
+        if br.get("state") != "closed":
+            bad.append(f"breaker did not recover: {br}")
+    if report["p99_s"] > report["p99_bound_s"]:
+        bad.append(f"p99 {report['p99_s']:.3f}s past bound "
+                   f"{report['p99_bound_s']:.3f}s")
+    return bad
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", choices=("core", "rollout"),
+                    default="core",
+                    help="core = scale/heal/swap taxonomy; rollout = "
+                         "canary / partial reshape / brown-out ladder")
     ap.add_argument("--groups", type=int, default=2)
     ap.add_argument("--seed", type=int, default=7)
     ap.add_argument("--requests", type=int, default=90)
@@ -484,6 +854,28 @@ def main(argv=None) -> int:
                          "(CI uploads it as an artifact on failure)")
     ap.add_argument("-v", "--verbose", action="store_true")
     args = ap.parse_args(argv)
+    if args.scenario == "rollout":
+        report = run_rollout_chaos(
+            groups=args.groups, seed=args.seed, requests=args.requests,
+            clients=args.clients, p99_bound_s=args.p99_bound_s,
+            verbose=args.verbose)
+        violations = check_rollout_report(report)
+        if args.log:
+            with open(args.log, "w") as f:
+                json.dump({"report": report, "violations": violations}, f,
+                          indent=2, default=lambda o: o.item()
+                          if hasattr(o, "item") else str(o))
+        print(f"rollout chaos: sent={report['sent']} ok={report['ok']} "
+              f"failed={report['failed']} "
+              f"mismatches={report['mismatches']} "
+              f"canary_good={report.get('canary_good')} "
+              f"canary_bad={report.get('canary_bad')} "
+              f"reshape={report.get('reshape', {}).get('happened')} "
+              f"overload={report.get('overload', {}).get('max_rung')}"
+              f"->>{report.get('overload', {}).get('final_rung')}")
+        for v in violations:
+            print(f"VIOLATION: {v}", file=sys.stderr)
+        return 1 if violations else 0
     report = run_chaos(groups=args.groups, seed=args.seed,
                        requests=args.requests, clients=args.clients,
                        scale_peak=args.scale_peak,

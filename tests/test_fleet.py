@@ -10,6 +10,7 @@ import pytest
 
 from repro.core import rctc, rhal, rimfs
 from repro.core.fleet import FleetConfig, FleetController, FleetError
+from repro.serving.protocol import F_CANARY
 from repro.serving.server import (Client, InferenceServer, ServerBusy,
                                   _Work)
 
@@ -132,7 +133,45 @@ def test_autoscaler_decides_up_on_real_backlog(chain_setup):
         server.stop()
 
 
-def test_heal_replaces_dead_group_and_serving_continues(chain_setup):
+def test_single_dead_group_partial_reshape_zero_survivor_bytes(chain_setup):
+    """One dead group in a multi-group mesh is spliced out by a partial
+    reshape: the mesh OBJECT survives, only the replaced slot's driver
+    changes, and the surviving groups' DMA counters move zero bytes
+    during the repair (their residency is never touched)."""
+    prog, files, image = chain_setup
+    server, addr, client = _start(prog, image, mesh_groups=4)
+    try:
+        fleet = FleetController(server)
+        x = _x(3)
+        ref = client.infer(input=x)
+        mesh = server.mesh
+        survivors = {g: mesh.group(g).driver for g in mesh.gids if g != 2}
+        dma_before = {g: d.stats.get("dma_bytes", 0)
+                      for g, d in survivors.items()}
+        old_driver = mesh.group(2).driver
+        mesh.kill(2)
+        rep = fleet.tick()
+        assert rep["action"] == ("replace", 2, "dead")
+        assert "error" not in rep
+        assert server.mesh is mesh              # same mesh, spliced slot
+        assert mesh.group(2).driver is not old_driver
+        for g, d in survivors.items():          # survivors untouched
+            assert mesh.group(g).driver is d
+            assert d.stats.get("dma_bytes", 0) == dma_before[g], \
+                f"group {g} moved bytes during a partial reshape"
+        assert all(mesh.alive(g) for g in mesh.gids)
+        out = client.infer(input=x)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], out[k])
+        kinds = [k for k, _ in fleet.events]
+        assert "reshape_started" in kinds and "reshape_complete" in kinds
+        assert "heal_complete" not in kinds
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_multi_dead_groups_fall_back_to_full_heal(chain_setup):
     prog, files, image = chain_setup
     server, addr, client = _start(prog, image, mesh_groups=4)
     try:
@@ -140,9 +179,10 @@ def test_heal_replaces_dead_group_and_serving_continues(chain_setup):
         x = _x(3)
         ref = client.infer(input=x)
         doomed = server.mesh
+        server.mesh.kill(1)
         server.mesh.kill(2)
         rep = fleet.tick()
-        assert rep["action"] == ("heal", (2,))
+        assert rep["action"] == ("heal", (1, 2))
         assert "error" not in rep
         assert server.mesh is not doomed
         assert all(server.mesh.alive(g) for g in server.mesh.gids)
@@ -174,10 +214,41 @@ def test_hot_swap_commits_and_stays_bit_identical(chain_setup):
         kinds = [k for k, _ in fleet.events]
         assert kinds[-3:] == ["swap_started", "swap_probed",
                               "swap_committed"]
+        # probation is REQUEST-count gated: serve enough traffic on the
+        # new binding, then the tick floor finalizes it
+        for i in range(fleet.cfg.probation_requests):
+            client.infer(input=_x(40 + i))
         for _ in range(fleet.cfg.probation_ticks + 1):
             fleet.tick()
         assert not fleet.summary()["swap_in_probation"]
         assert "swap_finalized" in [k for k, _ in fleet.events]
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_zero_traffic_probation_never_auto_commits(chain_setup):
+    """Satellite regression: the swap probation window counts SERVED
+    REQUESTS, not wall-clock ticks — an idle fleet can spin the control
+    loop forever without the swap silently finalizing (the old image's
+    residency stays pinned, so rollback remains a zero-byte flip)."""
+    prog, files, image = chain_setup
+    server, addr, client = _start(prog, image, mesh_groups=2)
+    try:
+        fleet = FleetController(server)
+        client.infer(input=_x(4))
+        assert fleet.swap_weights(rimfs.pack(files),
+                                  label="idle") == "committed"
+        # many times the tick floor, zero traffic: still in probation
+        for _ in range(fleet.cfg.probation_ticks * 5):
+            rep = fleet.tick()
+        assert rep["swap"]["state"] == "probation"
+        assert rep["swap"]["served"] == 0
+        assert fleet.summary()["swap_in_probation"]
+        assert "swap_finalized" not in [k for k, _ in fleet.events]
+        # rollback after the idle stretch is still possible and clean
+        fleet.rollback(reason="test")
+        assert not fleet.summary()["swap_in_probation"]
     finally:
         client.close()
         server.stop()
@@ -247,6 +318,122 @@ def test_post_swap_miss_spike_triggers_auto_rollback(chain_setup):
         reasons = [p["reason"] for k, p in fleet.events
                    if k == "swap_rolled_back"]
         assert any(r.startswith("miss_spike") for r in reasons)
+    finally:
+        client.close()
+        server.stop()
+
+
+# ------------------------------------------------------------------ canary
+def test_canary_good_image_auto_promotes_bit_identical(chain_setup):
+    """fraction=1.0 hash-routes every request through the shadow binding;
+    identical weights agree on every SPRT sample, so the controller
+    auto-promotes. Agreeing shadow-served replies carry F_CANARY, and
+    promotion flips the binding atomically."""
+    prog, files, image = chain_setup
+    server, addr, client = _start(prog, image, mesh_groups=2)
+    try:
+        fleet = FleetController(server)
+        x = _x(8)
+        ref = client.infer(input=x)
+        old_bound = server._bound
+        assert fleet.canary(rimfs.pack(files), fraction=1.0,
+                            label="repack") == "started"
+        assert server.canary is not None
+        flagged = 0
+        for _ in range(16):                 # > ~14 agrees the SPRT needs
+            rid = client.infer_async(input=x)
+            out, flags = client.result(rid, with_flags=True)
+            for k in ref:
+                np.testing.assert_array_equal(ref[k], out[k])
+            if flags & F_CANARY:
+                flagged += 1
+        assert flagged == 16                # fraction 1.0: all shadow-served
+        rep = fleet.tick()
+        assert rep["canary"]["state"] == "promote"
+        assert server.canary is None and fleet._canary is None
+        assert server._bound is not old_bound
+        promoted = [p for k, p in fleet.events if k == "canary_promoted"]
+        assert promoted and promoted[-1]["disagrees"] == 0
+        assert promoted[-1]["stats"]["served_shadow"] == 16
+        out = client.infer(input=x)         # promoted binding serves on
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], out[k])
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_canary_bad_image_serves_zero_wrong_bytes_then_aborts(chain_setup):
+    """A broken canary NEVER serves a byte it is known to have gotten
+    wrong: every sampled request that disagrees is answered with the
+    primary's bytes (no F_CANARY flag), and the SPRT aborts the rollout
+    after min_samples. The primary binding is untouched throughout."""
+    prog, files, image = chain_setup
+    server, addr, client = _start(prog, image, mesh_groups=2)
+    try:
+        fleet = FleetController(server)
+        x = _x(9)
+        ref = client.infer(input=x)
+        old_bound, old_fs = server._bound, server.platform.rimfs
+        wrong = rctc.gemm_chain_weights(DEPTH, N, seed=321)
+        assert fleet.canary(rimfs.pack(wrong), fraction=1.0,
+                            label="bad") == "started"
+        for _ in range(6):
+            rid = client.infer_async(input=x)
+            out, flags = client.result(rid, with_flags=True)
+            assert not (flags & F_CANARY)   # never the shadow's bytes
+            for k in ref:                   # always the primary's answer
+                np.testing.assert_array_equal(ref[k], out[k])
+        rep = fleet.tick()
+        assert rep["canary"]["state"] == "abort"
+        assert server.canary is None and fleet._canary is None
+        assert server._bound is old_bound
+        assert server.platform.rimfs is old_fs
+        aborted = [p for k, p in fleet.events if k == "canary_aborted"]
+        assert aborted and aborted[-1]["reason"] == "sprt"
+        assert aborted[-1]["stats"]["served_shadow"] == 0
+        assert aborted[-1]["stats"]["disagree"] >= \
+            fleet.cfg.canary_min_samples
+        out = client.infer(input=x)         # primary serves on, untouched
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], out[k])
+    finally:
+        client.close()
+        server.stop()
+
+
+def test_stage_ewma_straggler_replaced_in_place(chain_setup):
+    """A group whose stage-busy EWMA sits far above its peer's median for
+    straggler_ticks consecutive control-loop ticks is spliced out by a
+    partial reshape — the fast peer's driver (and its pinned weights)
+    are never touched."""
+    prog, files, image = chain_setup
+    server, addr, client = _start(prog, image, mesh_groups=2)
+    try:
+        fleet = FleetController(server, FleetConfig(
+            straggler_ticks=2, stage_straggler_ratio=2.0))
+        x = _x(10)
+        ref = client.infer(input=x)
+        mesh = server.mesh
+        old_slow = mesh.group(1).driver
+        fast = mesh.group(0).driver
+        # slot 1's stage-busy rhythm sits 25x above its peer's
+        fleet._stage_ewma = {0: 0.01, 1: 0.25}
+        r1 = fleet.tick()
+        assert r1["action"] is None          # hysteresis: streak 1 of 2
+        r2 = fleet.tick()
+        assert r2["action"] == ("replace", 1, "straggler")
+        assert "error" not in r2
+        assert server.mesh is mesh           # same mesh, spliced slot
+        assert mesh.group(1).driver is not old_slow
+        assert mesh.group(0).driver is fast
+        assert 1 not in fleet._stage_ewma    # fresh slot: rhythm reset
+        out = client.infer(input=x)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], out[k])
+        started = [p for k, p in fleet.events if k == "reshape_started"]
+        assert started and started[-1]["reason"] == "straggler"
+        assert "reshape_complete" in [k for k, _ in fleet.events]
     finally:
         client.close()
         server.stop()
